@@ -1,0 +1,49 @@
+"""Paper Figure 3 + §5 Dragonfly: partitioned-CIN bundles and LACIN
+dragonfly deployment arithmetic (incl. the HPE 28-bundles-of-16 layout)."""
+from __future__ import annotations
+
+import itertools
+
+from repro.core import (DragonflyConfig, fig3_16, frontier_like,
+                        hpe_dragonfly_group)
+from .common import row, time_us
+
+
+def rows():
+    out = []
+    us = time_us(lambda: fig3_16().report())
+    r = fig3_16().report()
+    assert (r["total_links"], r["intra_links"], r["inter_links"],
+            r["bundles"], r["wires_per_bundle"]) == (120, 24, 96, 6, 16)
+    out.append(row("fig3/partitioned16", us,
+                   "links=120=24intra+96inter bundles=6x16w"))
+    r = hpe_dragonfly_group().report()
+    assert (r["bundles"], r["wires_per_bundle"]) == (28, 16)
+    out.append(row("sec4/hpe_group", 0.0, "bundles=28x16w (2x4 partitions)"))
+    df = frontier_like()
+    out.append(row("sec5/dragonfly/frontier_like", 0.0,
+                   f"groups={df.num_groups} switches={df.switches} "
+                   f"endpoints={df.endpoints} radix={df.radix} "
+                   f"links={df.total_links}"))
+    # routing validation: l-g-l minimality on a small dragonfly
+    d = DragonflyConfig(group_size=8, terminals_per_switch=4,
+                        global_ports_per_switch=2, num_groups=16)
+    def _validate():
+        for ga, gb in itertools.product(range(8), repeat=2):
+            for sa, sb in ((0, 7), (3, 3), (5, 1)):
+                hops = d.route_packet((ga, sa, 0), (gb, sb, 1))
+                kinds = [h[0] for h in hops]
+                assert kinds.count("global") <= 1 and len(hops) <= 4
+    us = time_us(_validate, repeat=1)
+    out.append(row("sec5/dragonfly/lgl_routing", us,
+                   "l-g-l minimal, <=1 global hop, isoport colour match"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

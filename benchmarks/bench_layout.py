@@ -1,0 +1,48 @@
+"""Paper §4: LACIN wire lengths ((N^3-N)/6), the sqrt(2) anisoport factor,
+and the crossing analysis (Circle's closed form + zero-crossing rule vs
+XOR's growth)."""
+from __future__ import annotations
+
+from repro.core import (circle_layout_crossings_with_rule,
+                        circle_predicted_crossings, instance_crossings,
+                        lacin_total_wire_length,
+                        lacin_total_wire_length_enumerated,
+                        wire_length_histogram)
+from .common import row, time_us
+
+
+def rows():
+    out = []
+    for n in (8, 16, 64, 256):
+        us = time_us(lacin_total_wire_length_enumerated, n)
+        formula = lacin_total_wire_length(n)
+        enum = lacin_total_wire_length_enumerated(n)
+        assert formula == enum
+        out.append(row(f"sec4/wire_total/N{n}", us,
+                       f"(N^3-N)/6={formula} enumerated={enum}"))
+        hist = wire_length_histogram(n)
+        assert all(hist[d] == n - d for d in hist)
+        out.append(row(f"sec4/wire_hist/N{n}", 0.0,
+                       f"w wires of length N-w verified ({len(hist)} lengths)"))
+    for n in (8, 16, 32):
+        us = time_us(instance_crossings, "circle", n, repeat=1)
+        got = instance_crossings("circle", n)
+        pred = circle_predicted_crossings(n)
+        assert got == pred, (got, pred)
+        out.append(row(f"sec4/circle_crossings/N{n}", us,
+                       f"naive={sum(got)} predicted={sum(pred)} "
+                       f"with_rule={circle_layout_crossings_with_rule(n)}"))
+    for n in (8, 16, 32):
+        xc = sum(instance_crossings("xor", n))
+        out.append(row(f"sec4/xor_crossings/N{n}", 0.0,
+                       f"total={xc} (grows with N; Circle rule-> 0)"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Figure 2: P-matrix construction for the three CIN instances.
+
+Verifies (and times) Swap/Circle/XOR construction across sizes; derived
+column records the structural verification (complete / isoport / #links).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import port_matrix, verify_instance
+from .common import row, time_us
+
+
+def rows():
+    out = []
+    for inst, sizes in (("swap", (8, 64, 256, 1024)),
+                        ("circle", (8, 63, 256, 1023)),
+                        ("xor", (8, 64, 256, 1024))):
+        for n in sizes:
+            us = time_us(port_matrix, inst, n)
+            rep = verify_instance(inst, n)
+            assert rep["ok"], rep
+            out.append(row(
+                f"fig2/pmatrix/{inst}/N{n}", us,
+                f"links={rep['num_links']} isoport={rep['isoport']} "
+                f"complete={rep['complete']}"))
+    # The exact Figure-2 N=8 matrices, flattened checksum for reproducibility
+    for inst in ("swap", "circle", "xor"):
+        P = port_matrix(inst, 8)
+        out.append(row(f"fig2/pmatrix/{inst}/N8_checksum", 0.0,
+                       int(np.sum(P * np.arange(1, P.size + 1).reshape(P.shape)))))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper §3 + Algorithm 2: table-free minimal routing.
+
+Measures vectorized routing throughput (all N^2 pairs at once) for each
+instance and reports the hardware cost model (Table 1's routing column).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ROUTING_COST, port_matrix, route, route_jnp,
+                        routing_ops)
+from .common import row, time_us
+
+
+def _all_pairs(n):
+    a = np.arange(n)[:, None].repeat(n, 1)
+    b = np.arange(n)[None, :].repeat(n, 0)
+    return a, b
+
+
+def rows():
+    out = []
+    for inst, n in (("swap", 1024), ("circle", 1024), ("circle", 1023),
+                    ("xor", 1024)):
+        a, b = _all_pairs(n)
+        us = time_us(route, inst, a, b, n)
+        # correctness on the full pair set
+        P = port_matrix(inst, n)
+        i = np.asarray(route(inst, a, b, n))
+        mask = a != b
+        ok = (P[a[mask], i[mask]] == b[mask]).all()
+        assert ok
+        out.append(row(f"sec3/route_numpy/{inst}/N{n}", us,
+                       f"{us * 1e3 / (n * n):.2f}ns/route all-pairs-correct"))
+        # jnp (trace-safe) variant, jitted
+        fn = jax.jit(lambda a_, b_, inst=inst, n=n: route_jnp(inst, a_, b_, n))
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        fn(aj, bj).block_until_ready()
+        us = time_us(lambda: fn(aj, bj).block_until_ready())
+        out.append(row(f"sec3/route_jit/{inst}/N{n}", us,
+                       f"{us * 1e3 / (n * n):.2f}ns/route"))
+    for inst in ("xor", "swap", "circle"):
+        ops = routing_ops(inst)
+        assert ops["total_extra_vs_xor"] == ROUTING_COST[inst]
+        out.append(row(f"table1/routing_cost/{inst}", 0.0,
+                       f"extra_adders_comparators={ROUTING_COST[inst]} ({ops})"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Table 1: isoport property, sizes, normalized wire length, routing
+cost of the three 1-D CIN layouts."""
+from __future__ import annotations
+
+from repro.core import ROUTING_COST, swap_to_lacin_ratio, table1
+from .common import row, time_us
+
+
+def rows():
+    out = []
+    us = time_us(table1, 64)
+    for r in table1(n=64):
+        out.append(row(
+            f"table1/{r.instance}", us / 3,
+            f"isoport={r.isoport} sizes={r.sizes} "
+            f"wire_norm={r.wire_length_norm:.4f} routing_cost={r.routing_cost}"))
+    # asymptotic sqrt(2) check for Swap
+    for n in (64, 256, 1024):
+        out.append(row(f"table1/swap_ratio/N{n}",
+                       time_us(swap_to_lacin_ratio, n, repeat=1),
+                       f"{swap_to_lacin_ratio(n):.5f} (-> sqrt2=1.41421)"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

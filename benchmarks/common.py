@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, repeat: int = 5, warmup: int = 1, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def row(name: str, us: float, derived) -> tuple[str, float, str]:
+    return (name, round(us, 2), str(derived))
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

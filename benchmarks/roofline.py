@@ -1,0 +1,80 @@
+"""Roofline reader: aggregates results/dryrun/*.json into the §Roofline
+table (also emitted as markdown for EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import row
+
+
+def load(results_dir: str = "results/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(f"{results_dir}/*.json")):
+        recs.append(json.loads(Path(p).read_text()))
+    return recs
+
+
+def rows(results_dir: str = "results/dryrun"):
+    out = []
+    for r in load(results_dir):
+        cell = f"{r['arch']}/{r['shape']}/{r.get('mesh', '?')}"
+        if r.get("skipped"):
+            out.append(row(f"roofline/{cell}", 0.0, f"SKIP: {r['reason']}"))
+            continue
+        if not r.get("ok"):
+            out.append(row(f"roofline/{cell}", 0.0,
+                           f"FAIL: {r.get('error', '?')[:120]}"))
+            continue
+        t = r["roofline"]
+        out.append(row(
+            f"roofline/{cell}", r.get("compile_s", 0.0) * 1e6,
+            f"dominant={t['dominant']} compute={t['compute_s']*1e3:.2f}ms "
+            f"memory={t['memory_s']*1e3:.2f}ms "
+            f"collective={t['collective_s']*1e3:.2f}ms "
+            f"useful={t['useful_ratio']:.2f} "
+            f"peakGB={r['memory']['peak_estimate_bytes']/1e9:.1f}"))
+    return out
+
+
+def markdown_table(results_dir: str = "results/dryrun",
+                   mesh_filter: str | None = None) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL GF | useful | peak GB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in load(results_dir):
+        mesh = r.get("mesh")
+        mesh_s = (mesh if isinstance(mesh, str)
+                  else "x".join(str(v) for v in mesh.values()))
+        mesh_s = str(mesh_s).replace("pod2x16x16", "2x16x16") \
+                            .replace("pod16x16", "16x16")
+        if mesh_filter and mesh_s != mesh_filter:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh_s} | — | — | "
+                         f"— | SKIPPED | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh_s} | — | — | "
+                         f"— | FAILED | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        peak = r["memory"]["peak_estimate_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh_s} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{t['dominant']}** "
+            f"| {t['model_gflops_total']:.0f} | {t['useful_ratio']:.2f} "
+            f"| {peak:.1f} | {'y' if peak < 16 else 'NO'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

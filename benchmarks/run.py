@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline section reads
+the dry-run JSONs if present (run ``python -m repro.launch.dryrun --all``
+first for the full table).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+MODULES = [
+    "bench_port_matrices",   # Figure 2
+    "bench_table1",          # Table 1
+    "bench_layout",          # §4 wire length + crossings
+    "bench_routing",         # §3 + Algorithm 2
+    "bench_hyperx",          # §5 + Figure 4
+    "bench_dragonfly",       # Figure 3 + §5
+    "bench_simulation",      # §1/§2 link loads + step schedules
+    "bench_collectives",     # §2 refs [8,9]: LACIN collectives vs XLA
+    "roofline",              # §Roofline (from dry-run JSONs)
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["rows"])
+            from benchmarks.common import emit
+            emit(mod.rows())
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

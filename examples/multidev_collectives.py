@@ -1,0 +1,85 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""Multi-device demo: LACIN-scheduled collectives + explicit-DP training.
+
+    PYTHONPATH=src python examples/multidev_collectives.py
+
+Runs on 8 host devices: (1) compares the XOR/Circle/cyclic step schedules
+against lax.psum on an all-reduce; (2) trains a tiny LM where the gradient
+all-reduce is the paper's 1-factor schedule (optionally int8-compressed).
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import all_reduce_lacin, make_schedule
+
+
+def bench_allreduce(mesh, n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 1 << 20))
+    rows = []
+    for inst in ("xor", "circle", "cyclic"):
+        f = jax.jit(shard_map(
+            lambda xl, inst=inst: all_reduce_lacin(
+                xl[0], "x", axis_size=n, instance=inst)[None],
+            mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+        jax.block_until_ready(f(x))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(f(x))
+        rows.append((inst, (time.perf_counter() - t0) / 5 * 1e3))
+    f = jax.jit(shard_map(lambda xl: jax.lax.psum(xl[0], "x")[None],
+                          mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(f(x))
+    rows.append(("xla_psum", (time.perf_counter() - t0) / 5 * 1e3))
+    return rows
+
+
+def main():
+    devs = jax.devices()
+    n = len(devs)
+    mesh = Mesh(np.array(devs), ("x",))
+    print(f"devices: {n}")
+
+    s = make_schedule("auto", n)
+    print(f"schedule: {s.instance}, {s.num_steps} steps, "
+          f"matching/step={s.is_matching_per_step()}")
+
+    print("\nall-reduce of 4 MiB x 8 shards:")
+    for name, ms in bench_allreduce(mesh, n):
+        print(f"  {name:9s} {ms:7.2f} ms")
+
+    print("\nexplicit-DP training with LACIN gradient all-reduce:")
+    from repro.models import get_config
+    from repro.optim import OptConfig
+    from repro.runtime.manual_dp import make_manual_dp_train_step
+    from repro.runtime.trainer import init_train_state
+
+    cfg = get_config("lacin-demo").reduced()
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (n * 2, 32)), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    for compress in (False, True):
+        step = make_manual_dp_train_step(
+            cfg, mesh, OptConfig(lr=1e-3), axis_name="x", compress=compress)
+        # fresh state per run: the step donates its input buffers
+        st = init_train_state(jax.random.PRNGKey(0), cfg)
+        losses = []
+        for _ in range(5):
+            st, m = step(st, batch)
+            losses.append(float(m["loss"]))
+        tag = "int8-compressed" if compress else "fp32"
+        print(f"  {tag:16s} losses: " + " ".join(f"{l:.3f}" for l in losses))
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

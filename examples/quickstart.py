@@ -1,0 +1,71 @@
+"""Quickstart: the paper in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Builds the three CIN instances of Figure 2 and verifies their structure.
+2. Routes packets table-free (§3) and prints the LACIN layout stats (§4).
+3. Prints the 16^3 HyperX deployment (§5).
+4. Runs a tiny LM train step whose MoE dispatch uses the XOR 1-factor
+   schedule (single device; see examples/multidev_collectives.py for the
+   multi-device demonstration).
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (lacin_total_wire_length, make_schedule, port_matrix,
+                        route_packet, swap_to_lacin_ratio, table1,
+                        verify_instance)
+from repro.core.hyperx import paper_16cubed
+
+
+def main():
+    print("=== Figure 2: P matrices (N=8) ===")
+    for inst in ("swap", "circle", "xor"):
+        P = port_matrix(inst, 8)
+        rep = verify_instance(inst, 8)
+        print(f"\n{inst} (isoport={rep['isoport']}):\n{P}")
+
+    print("\n=== §3 minimal routing: computer (3,5) -> (6,2), XOR CIN-8 ===")
+    print("hops (switch, out-port):", route_packet("xor", 8, (3, 5), (6, 2)))
+
+    print("\n=== §4 LACIN layout (Table 1) ===")
+    for r in table1(n=256):
+        print(f"  {r.instance:7s} isoport={str(r.isoport):5s} "
+              f"wire_norm={r.wire_length_norm:.3f} "
+              f"routing_cost=+{r.routing_cost} vs XOR")
+    print(f"  total LACIN wire length N=16: {lacin_total_wire_length(16)} "
+          f"(= (16^3-16)/6)")
+
+    print("\n=== §5 the 16x16x16 HyperX, XOR-LACIN wired ===")
+    for k, v in paper_16cubed().report().items():
+        print(f"  {k} = {v}")
+
+    print("\n=== §2 as a collective schedule (mesh axis of 16) ===")
+    s = make_schedule("auto", 16)
+    print(f"  instance={s.instance} steps={s.num_steps} "
+          f"matching/step={s.is_matching_per_step()} "
+          f"contention_free={s.is_contention_free()}")
+    print(f"  step 3 pairs: {s.perm(3)[:4]} ...")
+
+    print("\n=== tiny LM train step (lacin-demo, 1 device) ===")
+    from repro.models import get_config
+    from repro.optim import OptConfig
+    from repro.runtime.trainer import init_train_state, make_train_step
+    from repro.models.layers import AxisRules
+
+    cfg = get_config("lacin-demo").reduced()
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, AxisRules(), OptConfig(lr=1e-3)))
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)
+    for i in range(3):
+        state, metrics = step(state, {"tokens": tok, "labels": tok})
+        print(f"  step {i}: loss={float(metrics['loss']):.4f} "
+              f"gnorm={float(metrics['grad_norm']):.3f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Topology explorer: inspect any CIN instance / HyperX / Dragonfly.
+
+    PYTHONPATH=src python examples/topology_explorer.py cin --instance circle --n 12
+    PYTHONPATH=src python examples/topology_explorer.py hyperx --dims 8 8 8 --terminals 8
+    PYTHONPATH=src python examples/topology_explorer.py dragonfly --groups 16 --group-size 8
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import (column_report, factorization, instance_crossings,
+                        lacin_total_wire_length, port_matrix,
+                        swap_to_lacin_ratio, verify_instance)
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig, HyperXDeployment
+
+
+def show_cin(args):
+    inst, n = args.instance, args.n
+    P = port_matrix(inst, n)
+    print(f"P matrix ({inst}, N={n}):")
+    print(P if n <= 16 else f"  [{n}x{n-1}] (too large to print)")
+    print("verify:", verify_instance(inst, n))
+    print(f"LACIN total wire length: {lacin_total_wire_length(n)}")
+    if inst == "swap":
+        print(f"oblique/straight ratio: {swap_to_lacin_ratio(n):.4f}")
+    else:
+        f = factorization(inst, n)
+        print(f"1-factors: {len(f)} x {len(f[0])} links")
+        print(f"naive crossings/column: {instance_crossings(inst, n)}")
+    for row in column_report(inst, n)[:4]:
+        print("  column:", row)
+
+
+def show_hyperx(args):
+    cfg = HyperXConfig(dims=tuple(args.dims), terminals=args.terminals,
+                       instance=args.instance)
+    dep = HyperXDeployment(cfg)
+    for k, v in dep.report().items():
+        print(f"  {k} = {v}")
+    a, b = 0, cfg.num_switches - 1
+    print("sample DOR route corner->corner:",
+          cfg.dor_route(cfg.switch_coord(a), cfg.switch_coord(b)))
+
+
+def show_dragonfly(args):
+    d = DragonflyConfig(group_size=args.group_size,
+                        terminals_per_switch=args.terminals,
+                        global_ports_per_switch=args.global_ports,
+                        num_groups=args.groups)
+    print(f"  switches={d.switches} endpoints={d.endpoints} radix={d.radix}")
+    print(f"  local links/group={d.local_links_per_group} "
+          f"global={d.global_links} total={d.total_links}")
+    print("sample l-g-l route:",
+          d.route_packet((0, 0, 0), (args.groups - 1, args.group_size - 1, 1)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    c = sub.add_parser("cin")
+    c.add_argument("--instance", default="circle",
+                   choices=["swap", "circle", "xor"])
+    c.add_argument("--n", type=int, default=8)
+    h = sub.add_parser("hyperx")
+    h.add_argument("--dims", type=int, nargs="+", default=[4, 4, 4])
+    h.add_argument("--terminals", type=int, default=4)
+    h.add_argument("--instance", default="xor")
+    d = sub.add_parser("dragonfly")
+    d.add_argument("--groups", type=int, default=16)
+    d.add_argument("--group-size", type=int, default=8)
+    d.add_argument("--terminals", type=int, default=4)
+    d.add_argument("--global-ports", type=int, default=2)
+    args = ap.parse_args()
+    {"cin": show_cin, "hyperx": show_hyperx,
+     "dragonfly": show_dragonfly}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    main()

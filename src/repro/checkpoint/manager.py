@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-agnostic.
+
+* **Atomic**: write to ``step_K.tmp/`` then ``os.rename`` — a crash mid-save
+  never corrupts the latest checkpoint.
+* **Async**: device->host transfer happens on the caller thread (cheap),
+  serialization + fsync on a background thread, so the train loop is not
+  blocked by disk.
+* **Mesh-agnostic**: arrays are saved UNSHARDED (gathered) with their
+  pytree structure; ``restore`` reshards onto whatever mesh/spec the new
+  job uses — this is what makes elastic restarts (different pod counts)
+  possible.
+* **Self-validating**: every file carries a checksum; ``latest_step`` only
+  reports checkpoints whose MANIFEST round-trips.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._pending: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, *, blocking: bool = False):
+        """Snapshot ``state`` at ``step``.  Transfers to host now; writes on
+        a background thread unless ``blocking``."""
+        names, leaves, _ = _flatten_with_names(state)
+        host_leaves = [np.asarray(x) for x in leaves]  # device->host now
+
+        def _write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "arrays": {}}
+            with open(tmp / "data.npz", "wb") as f:
+                np.savez(f, **{f"a{i}": a for i, a in enumerate(host_leaves)})
+                f.flush()
+                os.fsync(f.fileno())
+            digest = hashlib.sha256((tmp / "data.npz").read_bytes()).hexdigest()
+            manifest["arrays"] = {f"a{i}": {"name": n, "shape": list(a.shape),
+                                            "dtype": str(a.dtype)}
+                                  for i, (n, a) in enumerate(zip(names,
+                                                                 host_leaves))}
+            manifest["sha256"] = digest
+            (tmp / "MANIFEST.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+            self._gc()
+
+        with self._lock:
+            if self._pending is not None:
+                self._pending.join()       # one in flight at a time
+            t = threading.Thread(target=_write, daemon=True)
+            t.start()
+            self._pending = t
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        with self._lock:
+            if self._pending is not None:
+                self._pending.join()
+                self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "MANIFEST.json").exists():
+                continue
+            try:
+                man = json.loads((p / "MANIFEST.json").read_text())
+                out.append(int(man["step"]))
+            except Exception:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like, *, shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        shardings to place (reshard) the arrays onto — THE elastic-restart
+        hook: the saved ckpt knows nothing about the old mesh."""
+        path = self.dir / f"step_{step:08d}"
+        man = json.loads((path / "MANIFEST.json").read_text())
+        blob = (path / "data.npz").read_bytes()
+        if hashlib.sha256(blob).hexdigest() != man["sha256"]:
+            raise IOError(f"checksum mismatch in {path}")
+        data = np.load(path / "data.npz")
+        names, leaves, treedef = _flatten_with_names(like)
+        by_name = {v["name"]: k for k, v in man["arrays"].items()}
+        out = []
+        for n, leaf in zip(names, leaves):
+            arr = data[by_name[n]]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{n}: ckpt shape {arr.shape} != {leaf.shape}")
+            out.append(arr.astype(leaf.dtype))
+        restored = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            restored = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), restored, shardings)
+        return restored

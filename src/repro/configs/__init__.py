@@ -1,0 +1,11 @@
+"""Assigned-architecture configs.  Importing this package registers every
+architecture in :mod:`repro.models.config`'s registry (used by
+``--arch <id>`` in the launchers).
+"""
+from . import (xlstm_350m, hymba_1p5b, nemotron4_15b, starcoder2_3b,
+               llama32_3b, gemma3_1b, internvl2_26b, qwen3_moe_30b_a3b,
+               granite_moe_3b_a800m, whisper_base, lacin_demo)
+
+__all__ = ["xlstm_350m", "hymba_1p5b", "nemotron4_15b", "starcoder2_3b",
+           "llama32_3b", "gemma3_1b", "internvl2_26b", "qwen3_moe_30b_a3b",
+           "granite_moe_3b_a800m", "whisper_base", "lacin_demo"]

@@ -1,0 +1,136 @@
+"""Step schedules for collectives, derived from CIN 1-factorizations (§2).
+
+The paper's isoport instances are 1-factorizations of K_N: the N ports of
+index ``i`` form 1-factor ``i``.  Read as a *communication schedule*, step
+``i`` exchanges data along a perfect matching — every device talks to
+exactly one partner, no link is shared, and both endpoints use the same
+"port"/step index.  This is precisely the step-wise all-to-all discipline
+of the paper's refs [8, 9], and it is what LACIN-scheduled collectives
+(:mod:`repro.core.collectives`) execute with ``jax.lax.ppermute``.
+
+A :class:`LacinSchedule` is static (built from numpy at trace time): a
+``(steps, n)`` partner table plus the per-step ppermute permutation lists.
+``partner[step, s] == s`` marks an idle device (odd-N Circle only).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from .port_matrix import IDLE, circle_neighbor, is_power_of_two, xor_neighbor
+
+
+def partner_table(instance: str, n: int) -> np.ndarray:
+    """(steps, n) table: device ``s``'s exchange partner at each step.
+
+    * ``xor``    — steps = n-1, partner = s ^ (step+1); requires n = 2^k.
+    * ``circle`` — steps = n-1 (even n) or n (odd n; one idle per step).
+    * ``cyclic`` — anisoport baseline: partner = (s + step + 1) mod n.
+      Each step is a permutation but NOT a matching (send/recv partners
+      differ), i.e. ports at the two link ends differ — the paper's
+      anisoport case, kept for comparison.
+    """
+    s = np.arange(n)
+    if instance == "xor":
+        if not is_power_of_two(n):
+            raise ValueError(f"xor schedule needs power-of-two axis size, got {n}")
+        steps = [xor_neighbor(s, i) for i in range(n - 1)]
+    elif instance == "circle":
+        cols = n - 1 if n % 2 == 0 else n
+        steps = []
+        for i in range(cols):
+            t = circle_neighbor(s, i, n)
+            steps.append(np.where(t == IDLE, s, t))  # idle -> self
+    elif instance == "cyclic":
+        steps = [np.mod(s + i + 1, n) for i in range(n - 1)]
+    else:
+        raise ValueError(f"unknown schedule instance {instance!r}")
+    return np.stack(steps).astype(np.int64)
+
+
+@dataclass(frozen=True)
+class LacinSchedule:
+    """A static step schedule over one mesh axis.
+
+    ``table[step][s]`` is the device ``s`` *sends to*; ``inv_table[step][s]``
+    is the device ``s`` *receives from* (the inverse permutation).  For
+    isoport (matching) schedules the two coincide — every step is an
+    involution; they differ only for the anisoport ``cyclic`` baseline.
+    """
+    instance: str
+    n: int
+    table: tuple[tuple[int, ...], ...]       # (steps, n) send-partner table
+    inv_table: tuple[tuple[int, ...], ...]   # (steps, n) recv-source table
+    perms: tuple[tuple[tuple[int, int], ...], ...]  # per-step ppermute pairs
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.table)
+
+    def partners(self, step: int) -> np.ndarray:
+        return np.asarray(self.table[step])
+
+    def perm(self, step: int) -> list[tuple[int, int]]:
+        return list(self.perms[step])
+
+    # -- structural properties (the paper's guarantees) ---------------------
+    def is_matching_per_step(self) -> bool:
+        """Isoport property: each step's partner map is an involution."""
+        for row in self.table:
+            row = np.asarray(row)
+            if not np.array_equal(row[row], np.arange(self.n)):
+                return False
+        return True
+
+    def is_contention_free(self) -> bool:
+        """No directed link carries two flows within a step, and no device
+        sends or receives twice (permutation per step)."""
+        for perm in self.perms:
+            srcs = [a for a, _ in perm]
+            dsts = [b for _, b in perm]
+            if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+                return False
+        return True
+
+    def covers_all_pairs(self) -> bool:
+        """Across steps, every device meets every other exactly once (as a
+        send target)."""
+        met = {s: set() for s in range(self.n)}
+        for row in self.table:
+            for s, t in enumerate(row):
+                if t == s:
+                    continue
+                if t in met[s]:
+                    return False
+                met[s].add(int(t))
+        return all(met[s] == set(range(self.n)) - {s} for s in range(self.n))
+
+
+@lru_cache(maxsize=None)
+def make_schedule(instance: str, n: int) -> LacinSchedule:
+    """Build (and cache) the schedule for a mesh axis of size ``n``.
+
+    ``instance='auto'`` picks XOR when n is a power of two (simplest
+    routing, Table 1) else Circle (defined for any n).
+    """
+    if instance == "auto":
+        instance = "xor" if is_power_of_two(n) else "circle"
+    table = partner_table(instance, n)
+    inv = np.empty_like(table)
+    for k, row in enumerate(table):
+        inv[k, row] = np.arange(n)  # row is a permutation; invert it
+    perms = tuple(
+        tuple((s, int(t)) for s, t in enumerate(row) if int(t) != s)
+        for row in table)
+    return LacinSchedule(
+        instance=instance, n=n,
+        table=tuple(tuple(int(v) for v in row) for row in table),
+        inv_table=tuple(tuple(int(v) for v in row) for row in inv),
+        perms=perms)
+
+
+def schedule_for_axis(mesh, axis_name: str, instance: str = "auto") -> LacinSchedule:
+    """Schedule for a named mesh axis."""
+    return make_schedule(instance, mesh.shape[axis_name])

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels must reproduce (tests sweep shapes
+and dtypes and assert allclose).  They are deliberately written in the
+most obvious O(T*S)-memory way.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, q_pos=None, kv_pos=None,
+                        causal: bool = True, window: int = 0):
+    """q: (B,T,H,D); k/v: (B,S,KV,D) -> (B,T,H,D).  fp32 softmax."""
+    b, t, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if q_pos is None:
+        q_pos = jnp.arange(t, dtype=jnp.int32)
+    if kv_pos is None:
+        kv_pos = jnp.arange(s, dtype=jnp.int32)
+    qg = q.reshape(b, t, kvh, g, d).astype(jnp.float32) / np.sqrt(d)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    ok = (kv_pos[None, :] >= 0)
+    if causal:
+        ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        ok = ok & ((q_pos[:, None] - kv_pos[None, :]) < window)
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows -> zeros (matches kernel's guarded 1/l)
+    any_ok = ok.any(axis=-1)[None, None, None, :, None]
+    o = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    o = jnp.where(jnp.moveaxis(any_ok, 3, 1)[..., 0][..., None, None]
+                  if False else o == o, o, o)  # no-op; kept for clarity
+    mask_rows = ok.any(axis=-1)                     # (t,)
+    o = o * mask_rows[None, :, None, None, None]
+    return o.reshape(b, t, h, d).astype(q.dtype)
+
+
+def reference_mlstm(q, k, v, log_i, log_f, state=None):
+    """Sequential stabilized mLSTM — re-export of the model-side oracle."""
+    from repro.models.xlstm import mlstm_sequential
+    return mlstm_sequential(q, k, v, log_i, log_f, state)

@@ -1,0 +1,241 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Two measurement channels, cross-checked in EXPERIMENTS.md:
+
+1. **HLO channel** (this module): parse the post-SPMD optimized HLO.
+   Shapes in that module are PER-DEVICE.  ``compiled.cost_analysis()``
+   counts every computation ONCE (while-loop bodies are not multiplied by
+   trip count) — so we reconstruct loop-scaled totals ourselves by walking
+   the computation call graph with the ``known_trip_count`` annotations XLA
+   leaves in ``backend_config``.  Collective bytes are converted to
+   *semantics-adjusted wire bytes per device*:
+
+   ================== ===========================================
+   op                  wire bytes per device (group size N)
+   ================== ===========================================
+   all-reduce          2 (N-1)/N * size
+   all-gather          (N-1)/N * out_size
+   reduce-scatter      (N-1)   * out_size   (= (N-1)/N * in_size)
+   all-to-all          (N-1)/N * size
+   collective-permute  size
+   ================== ===========================================
+
+2. **Analytic channel** (:mod:`repro.launch.analytic`): exact matmul FLOPs
+   and first-order HBM traffic from the model formulas.
+
+Hardware constants (TPU v5e-class target): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_CALLED_RE = re.compile(r"(?:to_apply|body|condition|branch_computations)="
+                        r"\{?%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)\\?"\}')
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_shape_bytes(line: str) -> int:
+    m = re.search(r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))", line)
+    return _shape_bytes(m.group(1)) if m else 0
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+# ---------------------------------------------------------------------------
+# Module parsing: computations, call edges (with trip multipliers).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Comp:
+    name: str
+    lines: list = field(default_factory=list)
+    calls: list = field(default_factory=list)   # (callee, multiplier)
+
+
+def parse_module(hlo: str) -> tuple[dict[str, _Comp], str]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        head = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{$",
+                        s)
+        if head and not s.startswith(("ROOT", "//")) and "= " not in s:
+            cur = _Comp(head.group(2))
+            comps[cur.name] = cur
+            if head.group(1):
+                entry = cur.name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cur.lines.append(s)
+        if "while(" in s:
+            trip = _TRIP_RE.search(s)
+            mult = int(trip.group(1)) if trip else 1
+            for kind in ("body", "condition"):
+                m = re.search(rf"{kind}=%?([\w.\-]+)", s)
+                if m:
+                    cur.calls.append((m.group(1), mult if kind == "body" else 1))
+        else:
+            for m in re.finditer(r"(?:to_apply|called_computations=\{)%?([\w.\-]+)", s):
+                cur.calls.append((m.group(1), 1))
+            m = re.search(r"conditional\(", s)
+            if m:
+                for b in re.findall(r"branch_computations=\{([^}]*)\}", s):
+                    for name in re.findall(r"%?([\w.\-]+)", b):
+                        cur.calls.append((name, 1))
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    raw_bytes: dict = field(default_factory=dict)
+    wire_bytes: dict = field(default_factory=dict)
+    total_wire_bytes: float = 0.0
+    total_raw_bytes: float = 0.0
+
+    def add(self, op: str, raw: float, wire: float, count: float = 1):
+        self.counts[op] = self.counts.get(op, 0) + count
+        self.raw_bytes[op] = self.raw_bytes.get(op, 0) + raw
+        self.wire_bytes[op] = self.wire_bytes.get(op, 0) + wire
+        self.total_raw_bytes += raw
+        self.total_wire_bytes += wire
+
+
+def collective_stats(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Loop-scaled, semantics-adjusted collective wire bytes per device."""
+    comps, entry = parse_module(hlo_text)
+    # compute multiplier per computation by DFS from entry
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, k in comps[name].calls:
+            visit(callee, m * k)
+
+    if entry:
+        visit(entry, 1.0)
+
+    stats = CollectiveStats()
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for line in comp.lines:
+            cm = _COLL_RE.search(line)
+            if not cm or f"{cm.group(1)}-done(" in line:
+                continue
+            op = cm.group(1)
+            raw = _result_shape_bytes(line)
+            n = _group_size(line, default_group)
+            if op == "all-reduce":
+                wire = 2 * (n - 1) / max(n, 1) * raw
+            elif op == "all-gather":
+                wire = (n - 1) / max(n, 1) * raw
+            elif op == "reduce-scatter":
+                wire = (n - 1) * raw
+            elif op == "all-to-all":
+                wire = (n - 1) / max(n, 1) * raw
+            else:
+                wire = raw
+            stats.add(op, raw * m, wire * m, count=m)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineTerms:
+    """All *_s terms are seconds per step, per device."""
+    exec_gflops_per_dev: float
+    hbm_gbytes_per_dev: float
+    wire_gbytes_per_dev: float
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_gflops_total: float
+    useful_ratio: float
+    cost_analysis_flops: float    # raw, per-device, loop-body-once (caveat)
+    cost_analysis_bytes: float
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+def roofline(*, exec_flops_per_dev: float, hbm_bytes_per_dev: float,
+             wire_bytes_per_dev: float, chips: int, model_flops_total: float,
+             cost_flops: float = 0.0, cost_bytes: float = 0.0,
+             links_per_chip: int = 1) -> RooflineTerms:
+    compute_s = exec_flops_per_dev / PEAK_FLOPS
+    memory_s = hbm_bytes_per_dev / HBM_BW
+    collective_s = wire_bytes_per_dev / (ICI_BW * links_per_chip)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_exec = exec_flops_per_dev * chips
+    useful = model_flops_total / total_exec if total_exec else 0.0
+    return RooflineTerms(
+        exec_gflops_per_dev=exec_flops_per_dev / 1e9,
+        hbm_gbytes_per_dev=hbm_bytes_per_dev / 1e9,
+        wire_gbytes_per_dev=wire_bytes_per_dev / 1e9,
+        chips=chips, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_gflops_total=model_flops_total / 1e9, useful_ratio=useful,
+        cost_analysis_flops=cost_flops, cost_analysis_bytes=cost_bytes)

@@ -1,0 +1,59 @@
+"""``input_specs()``: ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation.  Used by the dry-run
+and by the roofline benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, ShapeConfig
+from repro.models.transformer import init_caches
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    text = s
+    out = {}
+    if cfg.num_patch_tokens:
+        text = s - cfg.num_patch_tokens
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patch_tokens, cfg.d_model), jnp.float32)
+    if cfg.num_meta_tokens:
+        text = text - cfg.num_meta_tokens
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    out["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+    return out
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    out = train_input_specs(cfg, shape)
+    out.pop("labels")
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """One new token against a KV cache of ``shape.seq_len``."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, s))
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.is_encdec:
+        out["cross_src"] = None  # cross K/V live in the caches
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,7 @@
+"""Model zoo: configs, layers, and the assembled architectures."""
+from .config import (ATTN, ATTN_CROSS, HYMBA, MLSTM, SLSTM, LONG_CONTEXT_OK,
+                     SHAPES, ModelConfig, ShapeConfig, cell_is_applicable,
+                     get_config, list_archs, register)
+from .layers import AxisRules, NO_SHARD
+from .transformer import (build_runs, cross_entropy, decode_step,
+                          forward_train, init_caches, init_params, prefill)

@@ -1,0 +1,487 @@
+"""Shared neural building blocks: norms, RoPE, GQA attention, MLPs.
+
+Everything is functional: ``init_*`` builds parameter pytrees (jnp arrays —
+usable under ``jax.eval_shape`` for allocation-free dry-runs) and the apply
+functions are pure.  Sharding is communicated with
+``jax.lax.with_sharding_constraint`` through the :class:`AxisRules`
+indirection so the same model code runs on 1 CPU device and on the
+(2, 16, 16) production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Logical-to-mesh axis mapping.
+
+    ``dp``   — batch-parallel axes (("pod","data") on the multi-pod mesh).
+    ``tp``   — tensor/expert-parallel axis ("model").
+    ``mesh`` — the device mesh (needed by shard_map sub-regions, e.g. the
+               LACIN expert-parallel MoE dispatch).
+    Default-constructed rules are no-ops (single-device / test mode).
+    """
+    dp: tuple[str, ...] = ()
+    tp: str | None = None
+    mesh: object = None
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.dp) or self.tp is not None
+
+    @property
+    def tp_size(self) -> int:
+        if self.tp is None or self.mesh is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    @property
+    def dp_size(self) -> int:
+        if not self.dp or self.mesh is None:
+            return 1
+        out = 1
+        for a in self.dp:
+            out *= self.mesh.shape[a]
+        return out
+
+    def spec(self, *axes) -> P:
+        """Build a PartitionSpec from logical axis tags.
+
+        Tags: 'dp' -> the dp mesh axes, 'tp' -> the tp axis, None -> unsharded.
+        """
+        out = []
+        for a in axes:
+            if a == "dp":
+                out.append(self.dp if self.dp else None)
+            elif a == "tp":
+                out.append(self.tp)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def constrain(self, x, *axes):
+        if not self.enabled:
+            return x
+        spec = self.spec(*axes)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            return lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+        return lax.with_sharding_constraint(x, spec)
+
+
+NO_SHARD = AxisRules()
+
+
+# ---------------------------------------------------------------------------
+# Initializers.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, dtype) -> dict:
+    p = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x, eps: float = 1e-6):
+    """RMSNorm (scale stored as offset-from-1) or LayerNorm."""
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def rms_norm_head(x, eps: float = 1e-6):
+    """Parameter-light qk-norm over the head dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta):
+    """cos/sin tables for rotary embeddings.
+
+    ``theta`` may be a traced scalar (per-layer theta inside a scanned stack).
+    positions: (..., T) int32 -> (..., T, head_dim/2) each.
+    """
+    half = head_dim // 2
+    freq_exponents = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = jnp.asarray(theta, jnp.float32) ** -freq_exponents
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, H, D). cos/sin: (B, T, D/2) or (T, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full or sliding window via per-layer ``window`` scalar).
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, kv, dh), dtype),
+        "wv": dense_init(ks[2], (d, kv, dh), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), dtype, fan_in=h * dh),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def qkv_proj(p, x, cfg, rules: AxisRules):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    tp = max(rules.tp_size, 1)
+    # Head sharding is only clean if the GQA grouping reshape (kvh, g)
+    # preserves it, i.e. kv heads divide the axis.  Otherwise q/k/v stay
+    # head-replicated here and _self_attention may expand KV to full heads.
+    if cfg.num_kv_heads % tp == 0 and cfg.num_heads % tp == 0:
+        q = rules.constrain(q, "dp", None, "tp", None)
+        k = rules.constrain(k, "dp", None, "tp", None)
+        v = rules.constrain(v, "dp", None, "tp", None)
+    else:
+        q = rules.constrain(q, "dp", None, None, None)
+        k = rules.constrain(k, "dp", None, None, None)
+        v = rules.constrain(v, "dp", None, None, None)
+    return q, k, v
+
+
+def maybe_expand_kv(q, k, v, rules: AxisRules):
+    """GQA -> MHA expansion when kv heads don't divide the model axis but
+    full heads do: the expanded (sharded) K/V is *smaller per device* than
+    replicated GQA K/V, and the attention einsums shard cleanly.
+    Used for train/prefill only (decode shards the cache on sequence)."""
+    tp = max(rules.tp_size, 1)
+    h, kvh = q.shape[2], k.shape[2]
+    if tp > 1 and kvh % tp and h % tp == 0 and h != kvh:
+        g = h // kvh
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = rules.constrain(k, "dp", None, "tp", None)
+        v = rules.constrain(v, "dp", None, "tp", None)
+        q = rules.constrain(q, "dp", None, "tp", None)
+    return q, k, v
+
+
+def out_proj(p, o, rules: AxisRules):
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return rules.constrain(y, "dp", None, None)
+
+
+#: Sentinel position marking padded KV slots (always masked).
+KV_PAD = jnp.iinfo(jnp.int32).max
+
+
+def _mask_bias(q_pos, kv_pos, window, causal: bool):
+    """(..., T, S) additive mask. window: traced scalar, 0 = unlimited."""
+    dq = q_pos[..., :, None]
+    dk = kv_pos[..., None, :]
+    ok = dk != KV_PAD
+    if causal:
+        ok &= dk <= dq
+    winf = jnp.asarray(window, jnp.int32)
+    ok &= (winf <= 0) | (dq - dk < winf)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention_naive(q, k, v, *, q_pos, kv_pos, window=0, causal=True,
+                    softcap: float = 0.0):
+    """Reference O(T·S)-memory attention.  q: (B,T,H,D), k/v: (B,S,KV,D)."""
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, t, kvh, g, dh)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(dh)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    bias = _mask_bias(q_pos, kv_pos, window, causal)  # (T, S) or (B,T,S)
+    while bias.ndim < logits.ndim:
+        bias = bias[None]
+    logits = logits + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return o.reshape(b, t, h, dh).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, q_pos, kv_pos, window=0, causal=True,
+                      softcap: float = 0.0, kv_chunk: int = 1024,
+                      q_block: int = 1024, skip_above_diagonal: bool = False):
+    """Online-softmax attention, blocked over both Q and KV (bounded memory).
+
+    Pure-JAX 'flash attention': an outer scan over Q blocks, an inner scan
+    over KV chunks keeping running (max, sum, acc).  The Pallas kernel
+    implements the same contract for TPU execution.
+
+    ``skip_above_diagonal``: for causal self-attention where ``q_pos`` and
+    ``kv_pos`` are the *same* monotonically increasing range, unroll the Q
+    blocks in Python and statically bound each block's KV scan at the
+    diagonal — saves ~2x masked-out FLOPs at the cost of a larger HLO.
+    """
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    pad_t = (-t) % q_block
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_t))
+    pad_s = (-s) % kv_chunk
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad_s), constant_values=KV_PAD)
+    tp, sp = t + pad_t, s + pad_s
+    g = h // kvh
+    nq, nk = tp // q_block, sp // kv_chunk
+    qg = (q.reshape(b, nq, q_block, kvh, g, dh).astype(jnp.float32)
+          / np.sqrt(dh))
+    kc = k.reshape(b, nk, kv_chunk, kvh, dh)
+    vc = v.reshape(b, nk, kv_chunk, kvh, dh)
+    pq = q_pos.reshape(nq, q_block)
+    pc = kv_pos.reshape(nk, kv_chunk)
+
+    def kv_step(carry, inp, qb, pqb):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        logits = jnp.einsum("btkgd,bckd->bkgtc", qb, kb.astype(jnp.float32))
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        bias = _mask_bias(pqb, pb, window, causal)
+        logits = logits + bias[None, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        scale = jnp.exp(m - m_new)
+        p_ = jnp.exp(logits - m_new[..., None])
+        l_new = l * scale + p_.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkgtc,bckd->bkgtd", p_, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    def q_block_out(qb, pqb, n_kv_chunks):
+        m0 = jnp.full((b, kvh, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_block, dh), jnp.float32)
+        xs = (jnp.moveaxis(kc[:, :n_kv_chunks], 1, 0),
+              jnp.moveaxis(vc[:, :n_kv_chunks], 1, 0), pc[:n_kv_chunks])
+        (m, l, acc), _ = lax.scan(
+            lambda c, i: kv_step(c, i, qb, pqb), (m0, l0, a0), xs)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(o, (1, 2), (2, 3))      # (b, Q, kv, g, d)
+
+    if skip_above_diagonal and causal and nq > 1:
+        outs = []
+        for i in range(nq):
+            hi = min(nk, -(-((i + 1) * q_block) // kv_chunk))
+            outs.append(q_block_out(qg[:, i], pq[i], hi))
+        o = jnp.stack(outs, axis=1)                  # (b, nq, Q, kv, g, d)
+    else:
+        o = lax.map(lambda args: q_block_out(args[0], args[1], nk),
+                    (jnp.moveaxis(qg, 1, 0), pq))    # (nq, b, Q, kv, g, d)
+        o = jnp.moveaxis(o, 0, 1)
+    o = o.reshape(b, tp, h, dh)[:, :t]
+    return o.astype(q.dtype)
+
+
+def attention_banded(q, k, v, *, q_pos, kv_pos, window, w_max: int,
+                     q_block: int = 1024):
+    """Sliding-window attention via banded KV gather (prefill path).
+
+    For window <= w_max (static), each Q block of length Q only sees keys
+    in [block_start - w_max, block_end): gather a (nq, Q + w_max) banded
+    view of K/V once, then scan Q blocks against their bands — executed
+    FLOPs drop from O(T*S) to O(T * (Q + w_max)) while the traced
+    ``window`` still masks exactly.
+    """
+    b, t, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    pad_t = (-t) % q_block
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_t))
+    nq = (t + pad_t) // q_block
+    band = q_block + w_max
+    starts = jnp.arange(nq) * q_block - w_max
+    idx = starts[:, None] + jnp.arange(band)[None, :]      # (nq, band)
+    valid = (idx >= 0) & (idx < s)
+    idx_c = jnp.clip(idx, 0, s - 1)
+    kb = jnp.take(k, idx_c, axis=1)                        # (b,nq,band,kv,d)
+    vb = jnp.take(v, idx_c, axis=1)
+    pb = jnp.where(valid, kv_pos[idx_c], KV_PAD)           # (nq, band)
+    qb = q.reshape(b, nq, q_block, h, dh)
+    pq = q_pos.reshape(nq, q_block)
+
+    def block(args):
+        qi, ki, vi, pqi, pbi = args
+        return attention_naive(qi, ki, vi, q_pos=pqi, kv_pos=pbi,
+                               window=window, causal=True)
+
+    o = lax.map(block, (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(kb, 1, 0),
+                        jnp.moveaxis(vb, 1, 0), pq, pb))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, t + pad_t, h, dh)[:, :t]
+    return o
+
+
+def attention(q, k, v, *, q_pos, kv_pos, window=0, causal=True,
+              softcap: float = 0.0, impl: str = "auto", kv_chunk: int = 1024,
+              q_block: int = 1024, bands=None):
+    """Dispatch: naive for small-S / decode, blocked for long, pallas on ask.
+
+    Decode (T == 1) always uses the naive path: with a sequence-sharded KV
+    cache XLA partitions the softmax reductions across the "model" axis —
+    distributed flash-decoding for free (SP decode).
+
+    ``bands``: static per-Q-block KV ranges (diagonal skipping / window
+    banding); only valid for aligned causal self-attention.
+    """
+    s, t = k.shape[1], q.shape[1]
+    if impl == "pallas" and t > 1:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                    window=window, causal=causal)
+    if impl == "naive" or t == 1 or (s <= 2048 and bands is None):
+        return attention_naive(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               window=window, causal=causal, softcap=softcap)
+    # long-sequence path: flash with FA2-style custom VJP (O(block) memory
+    # in the backward; plain reverse mode through the online-softmax scan
+    # would save the full (T, S) probability matrix per layer).
+    from .flash import flash_attention_jnp
+    return flash_attention_jnp(q, k, v, q_pos, kv_pos, window, causal,
+                               q_block, kv_chunk, bands)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {"wi": dense_init(ks[0], (d, f), dtype),
+         "wo": dense_init(ks[1], (f, d), dtype, fan_in=f)}
+    if gated:
+        p["wg"] = dense_init(ks[2], (d, f), dtype)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(p: dict, x, cfg, rules: AxisRules):
+    h = x @ p["wi"]
+    if "bi" in p:
+        h = h + p["bi"]
+    h = rules.constrain(h, "dp", None, "tp")
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * h
+    elif cfg.mlp == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    elif cfg.mlp == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(f"unknown mlp {cfg.mlp!r}")
+    h = rules.constrain(h, "dp", None, "tp")
+    y = h @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return rules.constrain(y, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg, dtype) -> dict:
+    """Embedding store padded to ``cfg.vocab_padded`` rows (Megatron-style)
+    so the vocab dim shards evenly; pad logits are masked at the unembed."""
+    p = {"table": embed_init(key, (cfg.vocab_padded, cfg.d_model), dtype)}
+    return p
+
+
+def embed_tokens(p, tokens, cfg, rules: AxisRules):
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * np.sqrt(cfg.d_model)
+    return rules.constrain(x.astype(cfg.dtype), "dp", None, None)
+
+
+def logits_from_hidden(x, embed_params, head_params, cfg, rules: AxisRules):
+    if cfg.tie_embeddings:
+        w = embed_params["table"].astype(cfg.dtype)
+        logits = jnp.einsum("btd,vd->btv", x, w)
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, head_params["w"].astype(cfg.dtype))
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.vocab_padded != cfg.vocab_size:  # mask padding rows to -inf
+        viota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(viota < cfg.vocab_size,
+                           logits, jnp.asarray(-1e30, logits.dtype))
+    return rules.constrain(logits, "dp", None, "tp")

@@ -1,0 +1,137 @@
+"""Mamba-style selective SSM branch (used by hymba's parallel heads).
+
+Train path: sequential ``lax.scan`` over time with an fp32 state carry
+(B, inner, state) — O(1) memory in T, exact.  Decode path: single-step
+state update against a cached (conv window, ssm state) pair.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import AxisRules, dense_init
+
+
+DT_RANK_DIV = 16  # dt_rank = max(d_model // 16, 8)
+
+
+def init_ssm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    state = cfg.ssm_state
+    dt_rank = max(d // DT_RANK_DIV, 8)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a_init = jnp.broadcast_to(jnp.arange(1, state + 1, dtype=jnp.float32),
+                              (inner, state))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * inner), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, inner), dtype,
+                             fan_in=cfg.conv_kernel),
+        "x_proj": dense_init(ks[2], (inner, dt_rank + 2 * state), dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, inner), dtype, fan_in=dt_rank),
+        "dt_bias": jnp.zeros((inner,), dtype),
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (inner, d), dtype, fan_in=inner),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv over time.  x: (B,T,C), w: (K,C).
+
+    ``state`` (B, K-1, C) holds the trailing inputs for decode; returns
+    (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _ssm_params(p, xc, cfg):
+    """Input-dependent dt, B, C from the conv output."""
+    state = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]
+    dt_lowrank = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank:dt_rank + state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + state:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_lowrank @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, b_t, c_t
+
+
+def apply_ssm(p: dict, x, cfg, rules: AxisRules, *, cache=None, pos=None):
+    """x: (B, T, d) -> (y (B, T, d), new_cache).
+
+    cache = {"conv": (B, K-1, inner), "state": (B, inner, state)} or None.
+    """
+    inner = cfg.ssm_expand * cfg.d_model
+    xz = x @ p["in_proj"]
+    xs, z = xz[..., :inner], xz[..., inner:]
+    xs = rules.constrain(xs, "dp", None, "tp")
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dt, b_t, c_t = _ssm_params(p, xc, cfg)          # (B,T,inner), (B,T,S)x2
+    a = -jnp.exp(p["A_log"])                         # (inner, S) fp32
+    xf = xc.astype(jnp.float32)
+
+    h0 = (jnp.zeros((x.shape[0], inner, cfg.ssm_state), jnp.float32)
+          if cache is None else cache["state"])
+
+    def step(h, inp):
+        # decay/drive are formed per-step from (T,B,...)-sliced inputs so
+        # the (B, T, inner, S) tensors are never materialized.
+        dt_t, bt_t, ct_t, x_t = inp  # (B,inner), (B,S), (B,S), (B,inner)
+        dec = jnp.exp(dt_t[..., None] * a)               # (B,inner,S)
+        drv = (dt_t * x_t)[..., None] * bt_t[:, None, :]
+        h = dec * h + drv
+        y = jnp.einsum("bis,bs->bi", h, ct_t)
+        return h, y
+
+    t = x.shape[1]
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_t, 1, 0),
+          jnp.moveaxis(c_t, 1, 0), jnp.moveaxis(xf, 1, 0))
+    chunk = 128
+    if t > chunk and t % chunk == 0:
+        # Two-level scan: the backward pass of a flat T-step scan would
+        # save every (B, inner, S) carry (T x state bytes).  Checkpointing
+        # a chunk-level body keeps only chunk-boundary states and
+        # recomputes in-chunk carries during the chunk's backward.
+        nc = t // chunk
+        xs_c = jax.tree_util.tree_map(
+            lambda a_: a_.reshape((nc, chunk) + a_.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_step(h, inp):
+            return lax.scan(step, h, inp)
+
+        h_last, ys = lax.scan(chunk_step, h0, xs_c)
+        ys = ys.reshape((t,) + ys.shape[2:])
+    else:
+        h_last, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                        # (B,T,inner)
+    y = y + p["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = {"conv": new_conv, "state": h_last}
+    return rules.constrain(out, "dp", None, None), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, inner), dtype),
+        "state": jnp.zeros((batch, inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,528 @@
+"""Model assembly: block bodies, scanned stacks, LM / enc-dec / VLM wiring.
+
+Layer stacks are grouped into *runs* of consecutive identical block kinds
+(:class:`RunSpec`); each run executes as one ``lax.scan`` over stacked
+parameters, with per-layer attention window and RoPE theta passed as traced
+scan inputs — so e.g. gemma3's 5:1 local:global pattern compiles to a
+single while-loop body.
+
+Three entry points per model (all pure functions of (params, batch)):
+
+* ``forward_train`` — teacher-forced CE for ``train_4k`` cells;
+* ``prefill``       — build KV caches + last-position logits (``prefill_*``);
+* ``decode_step``   — one-token step against caches (``decode_* / long_*``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ATTN, ATTN_CROSS, HYMBA, MLSTM, SLSTM, ModelConfig
+from . import layers as L
+from .layers import AxisRules
+from .moe import apply_moe, init_moe
+from .ssm import apply_ssm, init_ssm, init_ssm_cache
+from .xlstm import (apply_mlstm_block, apply_slstm_block, init_mlstm_block,
+                    init_mlstm_cache, init_slstm_block, init_slstm_cache)
+
+
+# ---------------------------------------------------------------------------
+# Run grouping.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunSpec:
+    kind: str
+    count: int
+    windows: tuple[int, ...]
+    thetas: tuple[float, ...]
+
+
+def build_runs(cfg: ModelConfig) -> tuple[RunSpec, ...]:
+    """Group consecutive layers into scanned runs (by kind: mixed windows
+    ride along as traced scan inputs; the banded path selects per layer
+    with lax.cond so the stack still compiles as one scan — splitting runs
+    by window was measured to break XLA's weight-gather hoisting, see
+    EXPERIMENTS.md §Perf cell 3 it2)."""
+    runs = []
+    pat, wins = cfg.block_pattern, cfg.windows
+
+    def key(i):
+        return pat[i]
+
+    i = 0
+    while i < len(pat):
+        j = i
+        while j < len(pat) and key(j) == key(i):
+            j += 1
+        windows = wins[i:j]
+        thetas = tuple(
+            (cfg.rope_theta_global if (w == 0 and cfg.rope_theta_global)
+             else cfg.rope_theta) for w in windows)
+        runs.append(RunSpec(pat[i], j - i, windows, thetas))
+        i = j
+    return tuple(runs)
+
+
+def _cast(p, dtype, keep=("A_log", "D", "dt_bias")):
+    """Cast float params to the compute dtype, keeping listed leaves fp32."""
+    def go(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in keep or not jnp.issubdtype(a.dtype, jnp.floating):
+            return a
+        return a.astype(dtype)
+    return jax.tree_util.tree_map_with_path(go, p)
+
+
+# ---------------------------------------------------------------------------
+# Block init.
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    if kind in (ATTN, ATTN_CROSS):
+        p = {
+            "ln1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_norm(cfg, dtype),
+        }
+        if kind == ATTN_CROSS:
+            p["lnx"] = L.init_norm(cfg, dtype)
+            p["xattn"] = L.init_attention(ks[1], cfg, dtype)
+        if cfg.is_moe:
+            p["moe"] = init_moe(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg, dtype)
+        if cfg.qk_norm:
+            p["q_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+            p["k_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+        return p
+    if kind == HYMBA:
+        return {
+            "ln1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ssm": init_ssm(ks[1], cfg, dtype),
+            "ln2": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(ks[2], cfg, dtype),
+            "attn_out_scale": jnp.zeros((cfg.d_model,), dtype),
+            "ssm_out_scale": jnp.zeros((cfg.d_model,), dtype),
+        }
+    if kind == MLSTM:
+        return init_mlstm_block(ks[0], cfg, dtype)
+    if kind == SLSTM:
+        return init_slstm_block(ks[0], cfg, dtype)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Attention plumbing shared by block kinds.
+# ---------------------------------------------------------------------------
+
+def _self_attention(p, y, cfg, rules, *, window, theta, q_pos, kv_pos,
+                    cache, causal=True, static_window=None):
+    """qkv + qk-norm + rope + (cache update) + attend + out-proj.
+
+    ``q_pos``: (T,) for train/prefill; scalar fill-position for decode
+    (uniform across the batch).  ``static_window``: python int when the
+    run's window is uniform — enables static KV-block skipping.
+    """
+    q, k, v = L.qkv_proj(p["attn"], y, cfg, rules)
+    if cfg.qk_norm:
+        q = L.rms_norm_head(q) * (1 + p["q_scale"])
+        k = L.rms_norm_head(k) * (1 + p["k_scale"])
+    decode = q_pos.ndim == 0
+    qvec = q_pos[None] if decode else q_pos           # (T,)
+    if theta is not None:
+        cos, sin = L.rope_cos_sin(qvec, cfg.head_dim, theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    bands = None
+    if cache is not None:
+        ck = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), q_pos, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), q_pos, axis=1)
+        k_all, v_all = ck, cv
+        new_cache = {"k": ck, "v": cv}
+    else:
+        new_cache = {"k": k, "v": v}       # cache keeps UNexpanded GQA kv
+        q, k, v = L.maybe_expand_kv(q, k, v, rules)
+        k_all, v_all = k, v
+        kv_pos = qvec
+        t = q.shape[1]
+        # aligned self-attention: static diagonal skipping (beyond-paper)
+        if causal and t > 2048 and cfg.attn_skip_diagonal:
+            from .flash import block_bounds
+            bands = block_bounds(t, t, causal=True, window=0,
+                                 q_block=1024, kv_chunk=1024)
+        # banded sliding-window path: per-layer lax.cond keeps the stack a
+        # single scan (static band width = cfg.sliding_window; the traced
+        # window masks exactly).  Prefill/inference only (naive-block bwd
+        # would re-materialize probabilities in training).
+        if (causal and t > 2048 and cfg.attn_banded and cfg.sliding_window
+                and t == k_all.shape[1]):
+            band_fn = lambda ops: L.attention_banded(
+                *ops[:3], q_pos=ops[3], kv_pos=ops[4], window=window,
+                w_max=cfg.sliding_window, q_block=1024)
+            full_fn = lambda ops: L.attention(
+                *ops[:3], q_pos=ops[3], kv_pos=ops[4], window=window,
+                causal=True, impl=cfg.attention_impl, bands=bands)
+            o = lax.cond(jnp.asarray(window, jnp.int32) > 0, band_fn,
+                         full_fn, (q, k_all, v_all, qvec, kv_pos))
+            return L.out_proj(p["attn"], o, rules), new_cache
+    o = L.attention(q, k_all, v_all, q_pos=qvec, kv_pos=kv_pos,
+                    window=window, causal=causal, impl=cfg.attention_impl,
+                    softcap=0.0, bands=bands)
+    return L.out_proj(p["attn"], o, rules), new_cache
+
+
+def _cross_attention(p, x, cfg, rules, cross_src, cache):
+    """Cross-attention against encoder output (or cached cross K/V)."""
+    y = L.apply_norm(p["lnx"], x)
+    q = jnp.einsum("btd,dhk->bthk", y, p["xattn"]["wq"])
+    if cache is not None and "ck" in cache:
+        ck, cv = cache["ck"], cache["cv"]
+    else:
+        ck = jnp.einsum("bsd,dhk->bshk", cross_src, p["xattn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", cross_src, p["xattn"]["wv"])
+    s = ck.shape[1]
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+    o = L.attention(q, ck, cv, q_pos=jnp.zeros((q.shape[1],), jnp.int32),
+                    kv_pos=kv_pos, window=0, causal=False, impl="auto")
+    out = jnp.einsum("bthk,hkd->btd", o, p["xattn"]["wo"])
+    return rules.constrain(out, "dp", None, None), {"ck": ck, "cv": cv}
+
+
+# ---------------------------------------------------------------------------
+# Block bodies.
+# ---------------------------------------------------------------------------
+
+def apply_attn_block(p, x, cfg, rules, *, kind, window, theta, q_pos, kv_pos,
+                     cache=None, causal=True, cross_src=None,
+                     static_window=None):
+    metrics = {}
+    y = L.apply_norm(p["ln1"], x)
+    attn_cache = None
+    if cache is not None:
+        attn_cache = {"k": cache["k"], "v": cache["v"]}
+    attn_out, new_cache = _self_attention(
+        p, y, cfg, rules, window=window, theta=theta, q_pos=q_pos,
+        kv_pos=kv_pos, cache=attn_cache, causal=causal,
+        static_window=static_window)
+    x = x + attn_out
+    if kind == ATTN_CROSS:
+        xo, xcache = _cross_attention(p, x, cfg, rules, cross_src, cache)
+        x = x + xo
+        new_cache.update(xcache)
+    y = L.apply_norm(p["ln2"], x)
+    if cfg.is_moe:
+        m, aux = apply_moe(p["moe"], y, cfg, rules)
+        metrics.update(aux)
+    else:
+        m = L.apply_mlp(p["mlp"], y, cfg, rules)
+    return x + m, new_cache, metrics
+
+
+def apply_hymba_block(p, x, cfg, rules, *, window, theta, q_pos, kv_pos,
+                      cache=None):
+    """Parallel attention ∥ SSM heads, fused by normalized mean [Hymba]."""
+    y = L.apply_norm(p["ln1"], x)
+    attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    attn_out, new_attn_cache = _self_attention(
+        p, y, cfg, rules, window=window, theta=theta, q_pos=q_pos,
+        kv_pos=kv_pos, cache=attn_cache, causal=True)
+    ssm_cache = None if cache is None else {"conv": cache["conv"],
+                                            "state": cache["state"]}
+    ssm_out, new_ssm_cache = apply_ssm(p["ssm"], y, cfg, rules,
+                                       cache=ssm_cache)
+    fused = 0.5 * (L.rms_norm_head(attn_out) * (1 + p["attn_out_scale"])
+                   + L.rms_norm_head(ssm_out) * (1 + p["ssm_out_scale"]))
+    x = x + fused.astype(x.dtype)
+    y = L.apply_norm(p["ln2"], x)
+    x = x + L.apply_mlp(p["mlp"], y, cfg, rules)
+    return x, {**new_attn_cache, **new_ssm_cache}, {}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction.
+# ---------------------------------------------------------------------------
+
+def init_run_cache(run: RunSpec, cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype, cross_len: int = 0):
+    """Per-run stacked cache pytree (leading dim = run.count)."""
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (run.count,) + a.shape), tree)
+    kv = {"k": jnp.zeros((batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+          "v": jnp.zeros((batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dtype)}
+    if run.kind == ATTN:
+        return stack(kv)
+    if run.kind == ATTN_CROSS:
+        kv["ck"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads,
+                              cfg.head_dim), dtype)
+        kv["cv"] = jnp.zeros_like(kv["ck"])
+        return stack(kv)
+    if run.kind == HYMBA:
+        return stack({**kv, **init_ssm_cache(cfg, batch)})
+    if run.kind == MLSTM:
+        return stack(init_mlstm_cache(cfg, batch))
+    if run.kind == SLSTM:
+        return stack(init_slstm_cache(cfg, batch))
+    raise ValueError(run.kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    runs = build_runs(cfg)
+    return [init_run_cache(r, cfg, batch, seq_len, dtype,
+                           cross_len=cfg.encoder_seq_len) for r in runs]
+
+
+# ---------------------------------------------------------------------------
+# Stack execution (scan over layers within each run).
+# ---------------------------------------------------------------------------
+
+def _run_body(run: RunSpec, cfg, rules, *, q_pos, kv_pos, causal, cross_src,
+              mode: str):
+    """mode: 'train' (no cache out), 'prefill' (cache out), 'decode'
+    (cache in+out)."""
+    # static window when the whole run shares one (enables block skipping)
+    static_window = (run.windows[0]
+                     if len(set(run.windows)) == 1 else None)
+
+    def body(x, per_layer):
+        p, window, theta, cache = per_layer
+        p = _cast(p, cfg.dtype)
+        cache = cache if mode == "decode" else None
+        if run.kind in (ATTN, ATTN_CROSS):
+            x, new_cache, metrics = apply_attn_block(
+                p, x, cfg, rules, kind=run.kind, window=window, theta=theta,
+                q_pos=q_pos, kv_pos=kv_pos, cache=cache, causal=causal,
+                cross_src=cross_src, static_window=static_window)
+        elif run.kind == HYMBA:
+            x, new_cache, metrics = apply_hymba_block(
+                p, x, cfg, rules, window=window, theta=theta, q_pos=q_pos,
+                kv_pos=kv_pos, cache=cache)
+        elif run.kind == MLSTM:
+            x, new_cache = apply_mlstm_block(p, x, cfg, rules, cache=cache)
+            metrics = {}
+        elif run.kind == SLSTM:
+            x, new_cache = apply_slstm_block(p, x, cfg, rules, cache=cache)
+            metrics = {}
+        else:
+            raise ValueError(run.kind)
+        aux = jnp.stack([metrics["moe_aux"], metrics["moe_z"]]) \
+            if metrics else jnp.zeros((2,), jnp.float32)
+        cache_out = new_cache if mode in ("prefill", "decode") \
+            else jnp.zeros((), jnp.float32)
+        return x, (cache_out, aux)
+    return body
+
+
+def apply_stack(stack_params: list, x, cfg: ModelConfig, rules: AxisRules,
+                runs: tuple[RunSpec, ...], *, q_pos, kv_pos, causal=True,
+                caches=None, cross_src=None, mode: str = "train"):
+    """Run all runs; returns (x, new_caches | None, aux_losses (2,))."""
+    aux_total = jnp.zeros((2,), jnp.float32)
+    new_caches = []
+    for ridx, run in enumerate(runs):
+        p_run = stack_params[ridx]
+        windows = jnp.asarray(run.windows, jnp.int32)
+        thetas = jnp.asarray(run.thetas, jnp.float32)
+        cache_in = (caches[ridx] if caches is not None
+                    else jnp.zeros((run.count,), jnp.float32))
+        body = _run_body(run, cfg, rules, q_pos=q_pos, kv_pos=kv_pos,
+                         causal=causal, cross_src=cross_src, mode=mode)
+        if cfg.remat == "full" and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif cfg.remat == "dots" and mode == "train":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        if cfg.scan_layers and run.count > 1:
+            x, (cache_out, aux) = lax.scan(body, x,
+                                           (p_run, windows, thetas, cache_in))
+            aux_total = aux_total + aux.sum(axis=0)
+        else:
+            outs = []
+            for i in range(run.count):
+                sl = jax.tree_util.tree_map(
+                    lambda a: a[i], (p_run, windows, thetas, cache_in))
+                x, (c_out, aux) = body(x, sl)
+                outs.append(c_out)
+                aux_total = aux_total + aux
+            cache_out = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs),
+                                               *outs)
+        new_caches.append(cache_out)
+    return x, (new_caches if mode in ("prefill", "decode") else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameter init.
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    runs = build_runs(cfg)
+    keys = jax.random.split(key, len(runs) + 6)
+    params: dict = {"embed": L.init_embed(keys[0], cfg, dtype)}
+    stack = []
+    for ridx, run in enumerate(runs):
+        layer_keys = jax.random.split(keys[ridx + 1], run.count)
+        stacked = jax.vmap(lambda k, kind=run.kind: init_block(kind, k, cfg,
+                                                               dtype))(layer_keys)
+        stack.append(stacked)
+    params["stack"] = stack
+    params["final_norm"] = L.init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": L.dense_init(keys[-1], (cfg.d_model, cfg.vocab_padded), dtype)}
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[-2], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block(ATTN, k, cfg, dtype))(enc_keys)
+        params["enc_norm"] = L.init_norm(cfg, dtype)
+    if cfg.num_meta_tokens:
+        params["meta_tokens"] = L.embed_init(
+            keys[-3], (cfg.num_meta_tokens, cfg.d_model), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Front ends.
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(seq_len: int, d: int):
+    pos = np.arange(seq_len)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(angle), np.cos(angle)], -1),
+                       jnp.float32)
+
+
+def encode_frames(params, frames, cfg: ModelConfig, rules: AxisRules):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+    s = frames.shape[1]
+    x = frames.astype(cfg.dtype) + sinusoidal_positions(
+        s, cfg.d_model).astype(cfg.dtype)
+    x = rules.constrain(x, "dp", None, None)
+    run = RunSpec(ATTN, cfg.encoder_layers, (0,) * cfg.encoder_layers,
+                  (cfg.rope_theta,) * cfg.encoder_layers)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x, _, _ = apply_stack([params["encoder"]], x, cfg, rules, (run,),
+                          q_pos=pos, kv_pos=pos, causal=False, mode="train")
+    return L.apply_norm(params["enc_norm"], x)
+
+
+def _prepare_prefix(params, tokens, cfg, rules, extra):
+    """Embed tokens and prepend any prefix streams (patches / meta tokens)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg, rules)
+    prefix_len = 0
+    if cfg.num_patch_tokens and extra is not None and "patch_embeds" in extra:
+        pe = extra["patch_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix_len += pe.shape[1]
+    if cfg.num_meta_tokens:
+        mt = jnp.broadcast_to(
+            params["meta_tokens"].astype(cfg.dtype),
+            (x.shape[0], cfg.num_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([mt, x], axis=1)
+        prefix_len += cfg.num_meta_tokens
+    return rules.constrain(x, "dp", None, None), prefix_len
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch, cfg: ModelConfig, rules: AxisRules):
+    """Teacher-forced forward: returns (loss, metrics)."""
+    runs = build_runs(cfg)
+    x, prefix_len = _prepare_prefix(params, batch["tokens"], cfg, rules, batch)
+    cross_src = (encode_frames(params, batch["frames"], cfg, rules)
+                 if cfg.is_encdec else None)
+    t = x.shape[1]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x, _, aux = apply_stack(params["stack"], x, cfg, rules, runs,
+                            q_pos=pos, kv_pos=pos, causal=True,
+                            cross_src=cross_src, mode="train")
+    x = L.apply_norm(params["final_norm"], x)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    logits = L.logits_from_hidden(x, params["embed"],
+                                  params.get("lm_head"), cfg, rules)
+    loss, n_tok = cross_entropy(logits, batch["labels"])
+    aux_loss = 0.01 * aux[0] + 0.001 * aux[1]
+    metrics = {"ce_loss": loss, "aux_loss": aux_loss, "tokens": n_tok}
+    return loss + aux_loss, metrics
+
+
+def cross_entropy(logits, labels):
+    """Masked CE; labels < 0 are ignored.  fp32 reduction.
+
+    The label logit is picked with a broadcast-iota select (not
+    take_along_axis) so a vocab-sharded logits tensor never has to be
+    all-gathered — the select fuses into the partial-vocab reduction and
+    GSPMD only all-reduces the (B, T) partials.
+    """
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == lab[..., None], logits, 0.0), axis=-1)
+    ce = (lse - picked) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    return ce.sum() / n, n
+
+
+def prefill(params, batch, cfg: ModelConfig, rules: AxisRules, seq_len: int):
+    """Prefill caches of length ``seq_len``; returns (last_logits, caches)."""
+    runs = build_runs(cfg)
+    x, _ = _prepare_prefix(params, batch["tokens"], cfg, rules, batch)
+    cross_src = (encode_frames(params, batch["frames"], cfg, rules)
+                 if cfg.is_encdec else None)
+    t = x.shape[1]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x, new_caches, _ = apply_stack(params["stack"], x, cfg, rules, runs,
+                                   q_pos=pos, kv_pos=pos, causal=True,
+                                   cross_src=cross_src, mode="prefill")
+    caches = []
+    for run, c in zip(runs, new_caches):
+        def pad_kv(path, a):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name in ("k", "v"):
+                pad = [(0, 0)] * a.ndim
+                pad[2] = (0, seq_len - t)
+                return jnp.pad(a, pad)
+            return a
+        caches.append(jax.tree_util.tree_map_with_path(pad_kv, c))
+    x = L.apply_norm(params["final_norm"], x[:, -1:])
+    logits = L.logits_from_hidden(x, params["embed"], params.get("lm_head"),
+                                  cfg, rules)
+    return logits, caches
+
+
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig,
+                rules: AxisRules, seq_len: int, cross_src=None):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 cache fill level.
+
+    Returns (logits (B, 1, V), new_caches).
+    """
+    runs = build_runs(cfg)
+    x = L.embed_tokens(params["embed"], tokens, cfg, rules)
+    kv_pos = jnp.arange(seq_len, dtype=jnp.int32)
+    q_pos = jnp.asarray(pos, jnp.int32)
+    x, new_caches, _ = apply_stack(params["stack"], x, cfg, rules, runs,
+                                   q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                                   caches=caches, cross_src=cross_src,
+                                   mode="decode")
+    x = L.apply_norm(params["final_norm"], x)
+    logits = L.logits_from_hidden(x, params["embed"], params.get("lm_head"),
+                                  cfg, rules)
+    return logits, new_caches

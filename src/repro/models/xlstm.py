@@ -1,0 +1,347 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential with block-diagonal recurrence).  [arXiv:2405.04517]
+
+The mLSTM recurrence (per batch, per head; stabilizer ``m``):
+
+    m_t = max(lf_t + m_{t-1}, li_t)
+    C_t = e^{lf_t + m_{t-1} - m_t} C_{t-1} + e^{li_t - m_t} k_t v_t^T
+    n_t = e^{lf_t + m_{t-1} - m_t} n_{t-1} + e^{li_t - m_t} k_t
+    h_t = (q_t C_t) / max(|q_t n_t|, e^{-m_t})          q pre-scaled 1/sqrt(dk)
+
+``mlstm_sequential`` is the exact oracle (also the decode step);
+``mlstm_chunkwise`` computes the same quantity chunk-parallel:  within a
+chunk, intra-chunk terms form a decay-weighted attention matrix and the
+carried state contributes a rank-]one[ correction, all stabilized by a
+per-row max.  Equivalence is tested to fp32 tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import AxisRules, dense_init, apply_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell math.
+# ---------------------------------------------------------------------------
+
+def mlstm_sequential(q, k, v, log_i, log_f, state=None):
+    """Exact recurrence.  q,k,v: (B,T,H,D); log_i/log_f: (B,T,H).
+
+    Returns (h (B,T,H,D), state) with state = (C (B,H,D,D), n (B,H,D),
+    m (B,H)).  All math in fp32.
+    """
+    b, t, h, d = q.shape
+    q = q.astype(jnp.float32) / np.sqrt(d)
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    li, lf = log_i.astype(jnp.float32), log_f.astype(jnp.float32)
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = inp
+        m_new = jnp.maximum(lft + m, lit)
+        a = jnp.exp(lft + m - m_new)[..., None]          # (B,H,1)
+        bcoef = jnp.exp(lit - m_new)[..., None]
+        C = a[..., None] * C + bcoef[..., None] * kt[..., None] * vt[..., None, :]
+        n = a * n + bcoef * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    (C, n, m), hs = lax.scan(
+        step, state,
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+         jnp.moveaxis(li, 1, 0), jnp.moveaxis(lf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)
+
+
+def mlstm_chunkwise_raw(q, k, v, log_i, log_f, chunk: int = 256):
+    """Zero-init chunkwise mLSTM returning UN-normalized per-position terms
+    for cross-device (context-parallel) state correction:
+
+    (num (B,T,H,D), dot (B,T,H), m_loc (B,T,H), b_global (B,T,H),
+     (F_total (B,H), C, n, m))
+
+    where ``h = num / max(|dot|, exp(-m_loc))`` reproduces the local
+    result, ``b_global`` is the inclusive cumulative log-forget within the
+    segment, and ``F_total = b_global[:, -1]``.  See models/xlstm_sp.py.
+    """
+    b, t, h, d = q.shape
+    nc = t // chunk
+    qs = (q.astype(jnp.float32) / np.sqrt(d)).reshape(b, nc, chunk, h, d)
+    ks = k.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    vs = v.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    lis = log_i.astype(jnp.float32).reshape(b, nc, chunk, h)
+    lfs = log_f.astype(jnp.float32).reshape(b, nc, chunk, h)
+    state = (jnp.zeros((b, h, d, d), jnp.float32),
+             jnp.zeros((b, h, d), jnp.float32),
+             jnp.full((b, h), -jnp.inf, jnp.float32),
+             jnp.zeros((b, h), jnp.float32))       # (+ F accumulator)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, inp):
+        C0, n0, m0, f0 = carry
+        qc, kc, vc, lic, lfc = inp
+        bcum = jnp.cumsum(lfc, axis=1)
+        btot = bcum[:, -1]
+        e = (bcum[:, :, None, :] - bcum[:, None, :, :] + lic[:, None, :, :])
+        e = jnp.where(tri[None, :, :, None], e, -jnp.inf)
+        g = bcum + m0[:, None, :]
+        m_row = jnp.maximum(jnp.max(e, axis=2), g)
+        m_row = jnp.maximum(m_row, -1e30)
+        s_mat = jnp.einsum("bthd,bshd->btsh", qc, kc) * jnp.exp(
+            e - m_row[:, :, None, :])
+        s_mat = jnp.where(tri[None, :, :, None], s_mat, 0.0)
+        c_inter = jnp.exp(g - m_row)
+        num = (jnp.einsum("btsh,bshd->bthd", s_mat, vc)
+               + c_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C0))
+        dot = (jnp.sum(s_mat, axis=2)
+               + c_inter * jnp.einsum("bthd,bhd->bth", qc, n0))
+        m_new = jnp.maximum(btot + m0, jnp.max(btot[:, None] - bcum + lic,
+                                               axis=1))
+        scale0 = jnp.exp(btot + m0 - m_new)
+        w_s = jnp.exp(btot[:, None] - bcum + lic - m_new[:, None])
+        C1 = (scale0[..., None, None] * C0
+              + jnp.einsum("bsh,bshd,bshe->bhde", w_s, kc, vc))
+        n1 = scale0[..., None] * n0 + jnp.einsum("bsh,bshd->bhd", w_s, kc)
+        return (C1, n1, m_new, f0 + btot), (num, dot, m_row,
+                                            bcum + f0[:, None, :])
+
+    (C, n, m, F), (nums, dots, m_rows, bglob) = lax.scan(
+        chunk_step, state,
+        (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(ks, 1, 0),
+         jnp.moveaxis(vs, 1, 0), jnp.moveaxis(lis, 1, 0),
+         jnp.moveaxis(lfs, 1, 0)))
+
+    def unfold(x):
+        return jnp.moveaxis(x, 0, 1).reshape((b, t) + x.shape[3:])
+
+    return (unfold(nums), unfold(dots), unfold(m_rows), unfold(bglob),
+            (F, C, n, m))
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = 256):
+    """Chunk-parallel mLSTM, identical semantics to ``mlstm_sequential``."""
+    b, t, h, d = q.shape
+    if t % chunk:
+        raise ValueError(f"T={t} must be a multiple of chunk={chunk}")
+    nc = t // chunk
+    q = (q.astype(jnp.float32) / np.sqrt(d)).reshape(b, nc, chunk, h, d)
+    k = k.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    v = v.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    li = log_i.astype(jnp.float32).reshape(b, nc, chunk, h)
+    lf = log_f.astype(jnp.float32).reshape(b, nc, chunk, h)
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.full((b, h), -jnp.inf, jnp.float32))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))            # s <= t
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+
+    def chunk_step(carry, inp):
+        C0, n0, m0 = carry
+        qc, kc, vc, lic, lfc = inp          # (B,chunk,H,*)
+        bcum = jnp.cumsum(lfc, axis=1)      # inclusive sum of log_f, (B,C,H)
+        btot = bcum[:, -1]                  # (B,H)
+        # intra-chunk log weights: e_ts = bcum_t - bcum_s + li_s   (s <= t,
+        # decay excludes step s's own forget gate? recurrence applies f_t
+        # when *adding* at t then decays forward:  product_{tau=s+1..t} f_tau
+        # = exp(bcum_t - bcum_s);  contribution enters with i_s.
+        e = (bcum[:, :, None, :] - bcum[:, None, :, :]
+             + lic[:, None, :, :])          # (B,t,s,H)
+        e = jnp.where(tri[None, :, :, None], e, -jnp.inf)
+        g = bcum + m0[:, None, :]           # inter exponent (B,C,H)
+        m_row = jnp.maximum(jnp.max(e, axis=2), g)        # (B,C,H)
+        m_row = jnp.maximum(m_row, -1e30)   # guard -inf rows
+        s_mat = jnp.einsum("bthd,bshd->btsh", qc, kc) * jnp.exp(
+            e - m_row[:, :, None, :])
+        s_mat = jnp.where(tri[None, :, :, None], s_mat, 0.0)
+        c_inter = jnp.exp(g - m_row)                      # (B,C,H)
+        num = (jnp.einsum("btsh,bshd->bthd", s_mat, vc)
+               + c_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C0))
+        dot = (jnp.sum(s_mat, axis=2)
+               + c_inter * jnp.einsum("bthd,bhd->bth", qc, n0))
+        den = jnp.maximum(jnp.abs(dot), jnp.exp(-m_row))[..., None]
+        h_out = num / den
+        # chunk-end state update
+        m_new = jnp.maximum(btot + m0, jnp.max(btot[:, None] - bcum + lic, axis=1))
+        scale0 = jnp.exp(btot + m0 - m_new)               # (B,H)
+        w_s = jnp.exp(btot[:, None] - bcum + lic - m_new[:, None])  # (B,C,H)
+        C1 = (scale0[..., None, None] * C0
+              + jnp.einsum("bsh,bshd,bshe->bhde", w_s, kc, vc))
+        n1 = scale0[..., None] * n0 + jnp.einsum("bsh,bshd->bhd", w_s, kc)
+        return (C1, n1, m_new), h_out
+
+    (C, n, m), hs = lax.scan(
+        chunk_step, state,
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+         jnp.moveaxis(li, 1, 0), jnp.moveaxis(lf, 1, 0)))
+    h_out = jnp.moveaxis(hs, 0, 1).reshape(b, t, h, d)
+    return h_out, (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block.
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    dh = inner // cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm_scale": jnp.zeros((d,), dtype),
+        "up": dense_init(ks[0], (d, 2 * inner), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, inner), dtype,
+                             fan_in=cfg.conv_kernel),
+        "wq": dense_init(ks[2], (inner, inner), dtype),
+        "wk": dense_init(ks[3], (inner, inner), dtype),
+        "wv": dense_init(ks[4], (inner, inner), dtype),
+        "w_i": dense_init(ks[5], (inner, cfg.num_heads), dtype),
+        "w_f": dense_init(ks[6], (inner, cfg.num_heads), dtype),
+        "b_i": jnp.zeros((cfg.num_heads,), dtype),
+        "b_f": jnp.full((cfg.num_heads,), 3.0, dtype),   # open forget gates
+        "hnorm_scale": jnp.zeros((inner,), dtype),
+        "down": dense_init(ks[7], (inner, d), dtype, fan_in=inner),
+    }
+
+
+def apply_mlstm_block(p, x, cfg, rules: AxisRules, *, cache=None,
+                      chunk: int = 256):
+    """Pre-norm residual mLSTM block.  cache: {"conv", "C", "n", "m"}."""
+    from .ssm import _causal_conv
+    b, t, d = x.shape
+    inner = cfg.ssm_expand * d
+    nh = cfg.num_heads
+    dh = inner // nh
+    y = apply_norm({"scale": p["norm_scale"]}, x)
+    up = y @ p["up"]
+    xin, z = up[..., :inner], up[..., inner:]
+    xin = rules.constrain(xin, "dp", None, "tp")
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, t, nh, dh)
+    k = (xc @ p["wk"]).reshape(b, t, nh, dh)
+    v = (xin @ p["wv"]).reshape(b, t, nh, dh)
+    log_i = (xc @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid((xc @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+    state = None if cache is None else (cache["C"], cache["n"], cache["m"])
+    if t == 1 or t % chunk:
+        h, (C, n, m) = mlstm_sequential(q, k, v, log_i, log_f, state)
+    else:
+        h, (C, n, m) = mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk)
+    h = h.reshape(b, t, inner).astype(x.dtype)
+    h = apply_norm({"scale": p["hnorm_scale"]}, h)        # output norm
+    h = h * jax.nn.silu(z)
+    out = h @ p["down"]
+    out = rules.constrain(out, "dp", None, None)
+    new_cache = {"conv": new_conv, "C": C, "n": n, "m": m}
+    return x + out, new_cache
+
+
+def init_mlstm_cache(cfg, batch, dtype=jnp.float32) -> dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    dh = inner // cfg.num_heads
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, inner), jnp.float32),
+        "C": jnp.zeros((batch, cfg.num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, cfg.num_heads, dh), jnp.float32),
+        "m": jnp.full((batch, cfg.num_heads), -jnp.inf, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block.
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ff = int(d * 4 / 3)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm_scale": jnp.zeros((d,), dtype),
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype),      # z, i, f, o
+        "r_gates": dense_init(ks[1], (nh, dh, 4 * dh), dtype, fan_in=dh),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))
+        ]).astype(dtype),
+        "hnorm_scale": jnp.zeros((d,), dtype),
+        "ffn_wi": dense_init(ks[2], (d, ff), dtype),
+        "ffn_wg": dense_init(ks[3], (d, ff), dtype),
+        "ffn_wo": dense_init(ks[4], (ff, d), dtype, fan_in=ff),
+        "ffn_norm_scale": jnp.zeros((d,), dtype),
+    }
+
+
+def slstm_scan(wx, r_gates, h0, c0, n0, m0, nh):
+    """Sequential sLSTM.  wx: (B,T,4d) input-driven gate preactivations.
+
+    Per step, recurrent contribution uses block-diagonal R per head.
+    Returns (h (B,T,d), (h,c,n,m) final).  fp32 math.
+    """
+    b, t, d4 = wx.shape
+    d = d4 // 4
+    dh = d // nh
+
+    def step(carry, wxt):
+        h, c, n, m = carry                          # (B,d) fp32, m:(B,d)
+        hh = h.reshape(b, nh, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r_gates).reshape(b, 4 * d)
+        pre = wxt.astype(jnp.float32) + rec
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        return (h_new, c, n, m_new), h_new
+
+    (h, c, n, m), hs = lax.scan(step, (h0, c0, n0, m0),
+                                jnp.moveaxis(wx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c, n, m)
+
+
+def apply_slstm_block(p, x, cfg, rules: AxisRules, *, cache=None):
+    b, t, d = x.shape
+    nh = cfg.num_heads
+    y = apply_norm({"scale": p["norm_scale"]}, x)
+    wx = y @ p["w_gates"] + p["b_gates"]
+    if cache is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, d), -jnp.inf, jnp.float32))
+    else:
+        state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    r = p["r_gates"].astype(jnp.float32)
+    hs, (h, c, n, m) = slstm_scan(wx, r, *state, nh=nh)
+    hs = apply_norm({"scale": p["hnorm_scale"]}, hs.astype(x.dtype))
+    x = x + rules.constrain(hs, "dp", None, None)
+    # gated FFN (factor 4/3)
+    y = apply_norm({"scale": p["ffn_norm_scale"]}, x)
+    hff = jax.nn.silu(y @ p["ffn_wg"]) * (y @ p["ffn_wi"])
+    hff = rules.constrain(hff, "dp", None, "tp")
+    x = x + rules.constrain(hff @ p["ffn_wo"], "dp", None, None)
+    return x, {"h": h, "c": c, "n": n, "m": m}
+
+
+def init_slstm_cache(cfg, batch, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}

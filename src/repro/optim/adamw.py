@@ -1,0 +1,95 @@
+"""AdamW + cosine schedule + global-norm clipping (no external deps).
+
+The optimizer state mirrors the parameter pytree (same sharding), so ZeRO-1
+style sharding falls out of the parameter partition specs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(opt: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / jnp.maximum(opt.total_steps - opt.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return opt.lr * warm * (opt.min_lr_ratio + (1 - opt.min_lr_ratio) * cos)
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """Decay weights only for >=2-D matrices (not norms/biases/gates)."""
+    name = path[-1].key if hasattr(path[-1], "key") else ""
+    return name not in ("scale", "bias", "b_i", "b_f", "b_gates", "dt_bias",
+                        "A_log", "D", "norm_scale", "hnorm_scale",
+                        "ffn_norm_scale", "q_scale", "k_scale",
+                        "attn_out_scale", "ssm_out_scale")
+
+
+def adamw_update(params, grads, state, opt: OptConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, opt.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+    b1, b2 = opt.beta1, opt.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if _decay_mask(path) and p.ndim >= 2:
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,217 @@
+"""Parameter / state / batch partition specs for the production mesh.
+
+Name-pattern based: every parameter leaf gets a PartitionSpec from its path
+(the leading stacked-layer dim is always unsharded).  GSPMD supports uneven
+shards (e.g. granite's 40 experts over 16) by implicit padding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import AxisRules
+
+
+def _leaf_spec(path, leaf, cfg: ModelConfig, rules: AxisRules) -> P:
+    tp = rules.tp
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    in_mlstm_ish = any(n in ("ssm",) for n in names)
+    nd = leaf.ndim
+    stacked = 1 if (names and names[0] == "stack") or "encoder" in names else 0
+
+    def spec(*tail):
+        return P(*([None] * stacked + list(tail)))
+
+    heads_shardable = cfg.num_heads % max(rules.tp_size, 1) == 0
+    kv_shardable = cfg.num_kv_heads % max(rules.tp_size, 1) == 0
+    ff_shardable = cfg.d_ff % max(rules.tp_size, 1) == 0 if cfg.d_ff else False
+
+    if name == "table":                       # embedding (V, d)
+        return P(tp, None)
+    if name == "w" and "lm_head" in names:    # (d, V)
+        return P(None, tp)
+    if name == "router":
+        return spec(None, None)
+    if in_moe and name in ("wi", "wg"):       # (E, d, f)
+        return spec(tp, None, None)
+    if in_moe and name == "wo":               # (E, f, d)
+        return spec(tp, None, None)
+    if name == "wq" and nd - stacked == 3:    # attn (d, h, dh)
+        return spec(None, tp, None) if heads_shardable else spec(tp, None, None)
+    if name in ("wk", "wv") and nd - stacked == 3:  # attn (d, kv, dh)
+        return spec(None, tp, None) if kv_shardable else spec(None, None, None)
+    if name in ("wq", "wk", "wv") and nd - stacked == 2:  # mLSTM (inner, inner)
+        return spec(None, tp)
+    if name == "wo" and nd - stacked == 3:    # attn out (h, dh, d)
+        return spec(tp, None, None) if heads_shardable else spec(None, None, tp)
+    if name in ("bq",):                       # (h, dh)
+        return spec(tp, None) if heads_shardable else spec(None, None)
+    if name in ("bk", "bv"):
+        return spec(tp, None) if kv_shardable else spec(None, None)
+    if name == "wi" or name == "wg":          # mlp (d, f)
+        return spec(None, tp) if ff_shardable else spec(None, None)
+    if name == "wo":                          # mlp (f, d)
+        return spec(tp, None) if ff_shardable else spec(None, None)
+    if name == "bi":                          # (f,)
+        return spec(tp) if ff_shardable else spec(None)
+    # --- xLSTM / SSM inner-dim sharded leaves -----------------------------
+    if name == "up":                          # (d, 2*inner)
+        return spec(None, tp)
+    if name == "down" or name == "out_proj":  # (inner, d)
+        return spec(tp, None)
+    if name in ("in_proj", "w_gates", "ffn_wi", "ffn_wg", "dt_proj"):
+        return spec(None, tp)
+    if name in ("ffn_wo", "x_proj"):          # (inner/ff, ...)
+        return spec(tp, None)
+    if name in ("A_log",):                    # (inner, S)
+        return spec(tp, None)
+    if name in ("D", "dt_bias"):              # (inner,)
+        return spec(tp)
+    if name == "conv_w":                      # (K, inner)
+        return spec(None, tp)
+    if name in ("wq_m", "wk_m", "wv_m"):
+        return spec(None, tp)
+    if names and "stack" in names and name in ("wq", "wk", "wv") \
+            and nd - stacked == 2:            # mLSTM (inner, inner)
+        return spec(None, tp)
+    # everything else (norm scales, small biases, meta tokens, gates)
+    return P(*([None] * nd))
+
+
+def _fit_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop sharded axes whose mesh extent does not divide the dim size
+    (jit rejects uneven in_shardings; e.g. whisper's 51865 vocab)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        out.append(ax if dim % extent == 0 else None)
+    return P(*out)
+
+
+#: Leaves at least this many elements get ZeRO-extended (fsdp-style 2-D)
+#: sharding on the master store: tp on the model dim, dp on the largest
+#: remaining dim.  GSPMD gathers the bf16 working copy once per step (the
+#: stacked scan input is resharded before the loop), so the wire cost is a
+#: single parameter gather while fp32 master/moments/grads stay 2-D-sharded.
+FSDP_MIN_ELEMS = 1 << 22    # 4M elements (16 MB fp32)
+
+
+def param_specs(params, cfg: ModelConfig, rules: AxisRules):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    def go(path, leaf):
+        spec = _leaf_spec(path, leaf, cfg, rules)
+        if rules.mesh is None:
+            return spec
+        if int(np.prod(leaf.shape)) >= FSDP_MIN_ELEMS:
+            spec = zero_extend_spec(spec, leaf.shape, rules)
+        return _fit_spec(spec, leaf.shape, rules.mesh)
+    return jax.tree_util.tree_map_with_path(go, params)
+
+
+def zero_extend_spec(spec: P, shape: tuple, rules: AxisRules) -> P:
+    """ZeRO-style extension: additionally shard the largest unsharded dim
+    over the dp axes (if it divides).  Used for optimizer moments and the
+    gradient accumulator — they are only touched once per step, so the
+    extra gather cost is one parameter-delta all-gather."""
+    if not rules.dp or rules.mesh is None:
+        return spec
+    used = {a for ax in spec if ax is not None
+            for a in (ax if isinstance(ax, tuple) else (ax,))}
+    if used & set(rules.dp):
+        return spec    # dp axes already placed (idempotent)
+    extent = rules.dp_size
+    tail = tuple(spec) + (None,) * (len(shape) - len(spec))
+    cands = [(d, i) for i, (d, ax) in enumerate(zip(shape, tail))
+             if ax is None and d % extent == 0 and d >= extent]
+    if not cands:
+        return spec
+    _, idx = max(cands)
+    out = list(tail)
+    out[idx] = rules.dp if len(rules.dp) > 1 else rules.dp[0]
+    return P(*out)
+
+
+def opt_state_specs(params, pspecs, rules: AxisRules):
+    mom = jax.tree_util.tree_map(
+        lambda leaf, spec: zero_extend_spec(spec, leaf.shape, rules),
+        params, pspecs)
+    return {"m": mom, "v": mom, "step": P()}
+
+
+def grad_accum_specs(params, cfg, rules: AxisRules):
+    """Sharding for the microbatch gradient accumulator (ZeRO-2-ish)."""
+    ps = param_specs(params, cfg, rules)
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: zero_extend_spec(spec, leaf.shape, rules),
+        params, ps)
+
+
+def state_specs(params, cfg, rules):
+    ps = param_specs(params, cfg, rules)
+    return {"params": ps, "opt": opt_state_specs(params, ps, rules),
+            "step": P()}
+
+
+def train_batch_specs(cfg: ModelConfig, rules: AxisRules) -> dict:
+    dp = rules.dp if rules.dp else None
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.num_patch_tokens:
+        out["patch_embeds"] = P(dp, None, None)
+    if cfg.is_encdec:
+        out["frames"] = P(dp, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, rules: AxisRules, batch: int,
+                seq_len: int = 8):
+    """Decode-cache specs.  Batch over dp when it divides; otherwise
+    sequence-parallel over every axis (long_500k, batch 1)."""
+    dp = rules.dp if rules.dp else ()
+    tp = rules.tp
+    big_batch = batch >= max(rules.dp_size, 1) and rules.dp_size > 1
+    bspec = dp if big_batch else None
+    # sequence axis: tp normally; everything when batch is unshardable
+    sspec = tp if big_batch else (tuple(dp) + (tp,) if tp else dp) or None
+
+    def leaf(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v"):          # (L, B, S, kv, dh)
+            return P(None, bspec, sspec, None, None)
+        if name in ("ck", "cv"):        # (L, B, S_enc, kv, dh)
+            return P(None, bspec, None, None, None)
+        if name == "conv":              # (L, B, K-1, inner)
+            return P(None, bspec, None, tp)
+        if name == "state":             # (L, B, inner, S)
+            return P(None, bspec, tp, None)
+        if name == "C":                 # mLSTM (L, B, H, dh, dh)
+            return P(None, bspec, None, tp, None)
+        if name == "n":                 # mLSTM (L,B,H,dh) / sLSTM (L,B,d)
+            return P(None, bspec, None, tp) if a.ndim == 4 \
+                else P(None, bspec, tp)
+        if name == "m":                 # mLSTM (L,B,H) / sLSTM (L,B,d)
+            if a.ndim == 3 and a.shape[-1] != cfg.num_heads:
+                return P(None, bspec, tp)
+            return P(None, bspec, None)
+        if name in ("h", "c"):          # sLSTM (L, B, d)
+            return P(None, bspec, tp)
+        return P(*([None] * a.ndim))
+
+    from repro.models.transformer import init_caches
+    shapes = jax.eval_shape(lambda: init_caches(cfg, batch, seq_len))
+    def go(path, a):
+        spec = leaf(path, a)
+        return _fit_spec(spec, a.shape, rules.mesh) if rules.mesh is not None \
+            else spec
+    return jax.tree_util.tree_map_with_path(go, shapes)

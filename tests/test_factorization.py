@@ -1,0 +1,39 @@
+"""Paper §2: isoport instances are 1-factorizations of K_N."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (column_contention, factorization,
+                        is_one_factorization, is_perfect_matching,
+                        port_matrix)
+
+
+@pytest.mark.parametrize("inst,n", [("circle", 4), ("circle", 8),
+                                    ("circle", 32), ("xor", 4), ("xor", 8),
+                                    ("xor", 64)])
+def test_isoport_instances_are_one_factorizations(inst, n):
+    assert is_one_factorization(port_matrix(inst, n))
+
+
+def test_factor_count_matches_ports():
+    f = factorization("circle", 16)
+    assert len(f) == 15                    # N-1 1-factors
+    assert all(len(fac) == 8 for fac in f)  # N/2 links each
+
+
+def test_swap_columns_are_not_matchings():
+    cont = column_contention(port_matrix("swap", 8))
+    assert cont.max() > 1
+    assert cont.tolist() == [7, 6, 5, 4, 5, 6, 7]  # concentration on i, i+1
+
+
+def test_odd_circle_factors_are_near_perfect():
+    f = factorization("circle", 9)
+    for fac in f:
+        assert is_perfect_matching(fac, 9)
+        assert len(fac) == 4               # (N-1)/2 links, one idle switch
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 64).filter(lambda x: x % 2 == 0))
+def test_circle_factorization_property(n):
+    assert is_one_factorization(port_matrix("circle", n))

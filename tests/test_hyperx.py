@@ -1,0 +1,69 @@
+"""Paper §5 + Figure 4: HyperX with LACIN wiring."""
+import pytest
+
+from repro.core import (HyperXConfig, all_pairs_max_hops, fig4_4cubed,
+                        hyperx_link_loads, paper_16cubed)
+
+
+def test_paper_16cubed_flagship_numbers():
+    r = paper_16cubed().report()
+    assert r["switches"] == 4096
+    assert r["endpoints"] == 65536
+    assert r["radix"] == 61                      # 16 edge + 3*15 network
+    assert r["network_ports_per_switch"] == 45
+    assert r["z_links_per_rack"] == 120          # 15 columns of 8 wires
+    assert r["z_columns_per_rack"] == 15
+    assert r["z_wires_per_column"] == 8
+    assert r["super_ports_per_rack_x"] == 15
+    assert r["wires_per_super_port"] == 16
+    assert r["hoses_per_rack_row"] == 120        # of 16 wires each
+    assert r["hose_colours_x"] == (15, 8)        # 15 colours x 8 hoses
+    assert r["racks"] == 256 and r["rack_grid"] == (16, 16)
+
+
+def test_fig4_4cubed():
+    r = fig4_4cubed().report()
+    assert r["switches"] == 64 and r["endpoints"] == 256
+    assert r["radix"] == 13                      # 4 + 3*3
+    assert r["hoses_per_rack_row"] == 6 and r["hose_colours_x"] == (3, 2)
+
+
+def test_dor_routing_diameter():
+    cfg = HyperXConfig(dims=(4, 4, 4), terminals=4)
+    assert cfg.diameter == 3
+    assert all_pairs_max_hops(cfg) == 3
+
+
+def test_dor_skips_matching_digits():
+    cfg = HyperXConfig(dims=(4, 4, 4), terminals=4)
+    hops = cfg.dor_route((1, 2, 3), (1, 2, 0))
+    assert len(hops) == 1                        # only X differs
+    hops = cfg.dor_route((1, 2, 3), (1, 2, 3))
+    assert hops == []
+
+
+def test_per_dimension_xor_ports():
+    """§5: port P_{A_d xor B_d - 1} within the dimension's port block."""
+    cfg = HyperXConfig(dims=(16, 16, 16), terminals=16)
+    src, dst_digit, d = (3, 5, 9), 12, 2
+    port = cfg.port_for(src, d, dst_digit)
+    base = cfg.dim_port_base(d)
+    assert port == base + (9 ^ 12) - 1
+
+
+def test_endpoint_routing_ejects_at_b0():
+    cfg = HyperXConfig(dims=(4, 4), terminals=4)
+    hops = cfg.route_endpoint(0, 63)
+    assert hops[-1][1] == 63 % 4                 # ejection port = C0
+
+
+def test_uniform_traffic_perfectly_balanced():
+    ll = hyperx_link_loads(HyperXConfig(dims=(4, 4), terminals=4))
+    assert ll["load_cv"] == 0.0
+    assert ll["max_link_load"] == ll["min_link_load"]
+
+
+def test_xor_hyperx_rejects_non_pow2_dims():
+    with pytest.raises(ValueError):
+        HyperXConfig(dims=(6, 6), terminals=4, instance="xor")
+    HyperXConfig(dims=(6, 6), terminals=4, instance="circle")  # ok

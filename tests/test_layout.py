@@ -1,0 +1,58 @@
+"""Paper §4: LACIN wire lengths and crossing analysis."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (circle_layout_crossings_with_rule,
+                        circle_predicted_crossings, instance_crossings,
+                        lacin_total_wire_length,
+                        lacin_total_wire_length_enumerated,
+                        swap_to_lacin_ratio, table1, wire_length_histogram)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 256))
+def test_wire_length_formula(n):
+    assert lacin_total_wire_length(n) == lacin_total_wire_length_enumerated(n)
+    hist = wire_length_histogram(n)
+    # "w wires of length N - w"
+    assert all(hist[n - w] == w for w in range(1, n))
+
+
+def test_swap_ratio_approaches_sqrt2():
+    r64, r256, r1024 = (swap_to_lacin_ratio(n) for n in (64, 256, 1024))
+    assert r64 < r256 < r1024 < math.sqrt(2)
+    assert abs(r1024 - math.sqrt(2)) < 0.01
+
+
+@pytest.mark.parametrize("n", [8, 16, 32, 64])
+def test_circle_crossing_closed_form(n):
+    got = instance_crossings("circle", n)
+    assert got == circle_predicted_crossings(n)
+    # i parallel links crossed for i < N/2, N-2-i after
+    assert got[0] == 0 and got[-1] == 0
+    assert max(got) == n // 2 - 1
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_circle_left_right_rule_removes_all_crossings(n):
+    assert circle_layout_crossings_with_rule(n) == 0
+
+
+def test_xor_crossings_grow_with_n():
+    c8 = sum(instance_crossings("xor", 8))
+    c16 = sum(instance_crossings("xor", 16))
+    c32 = sum(instance_crossings("xor", 32))
+    assert 0 < c8 < c16 < c32
+
+
+def test_table1_summary():
+    rows = {r.instance: r for r in table1(n=256)}
+    assert rows["circle"].isoport and rows["xor"].isoport
+    assert not rows["swap"].isoport
+    assert rows["circle"].wire_length_norm == 1.0
+    assert rows["xor"].sizes == "N=2^n"
+    assert 1.3 < rows["swap"].wire_length_norm < math.sqrt(2)
+    assert (rows["xor"].routing_cost, rows["swap"].routing_cost,
+            rows["circle"].routing_cost) == (0, 1, 5)

@@ -1,0 +1,76 @@
+"""Paper §2: port-pairing matrices (Figure 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (IDLE, circle_matrix, is_complete, is_isoport,
+                        port_matrix, swap_matrix, swap_neighbor,
+                        swap_peer_port, verify_instance, xor_matrix)
+
+
+def test_fig2_swap_n8():
+    P = swap_matrix(8)
+    # First row connects switch 0 to 1..7 in port order (first-available).
+    assert P[0].tolist() == [1, 2, 3, 4, 5, 6, 7]
+    assert P[7].tolist() == [0, 1, 2, 3, 4, 5, 6]
+    assert is_complete(P) and not is_isoport(P)
+
+
+def test_fig2_circle_n8():
+    P = circle_matrix(8)
+    # Last switch (N-1) sees switch i through port i (Algorithm 1).
+    assert P[7].tolist() == [0, 1, 2, 3, 4, 5, 6]
+    # 1-factor i=3 from the paper: highlighted parallel links + (3, 7).
+    col3 = P[:, 3].tolist()
+    assert col3[3] == 7 and col3[7] == 3
+    assert is_complete(P) and is_isoport(P)
+
+
+def test_fig2_xor_n8():
+    P = xor_matrix(8)
+    for s in range(8):
+        for i in range(7):
+            assert P[s, i] == s ^ (i + 1)
+    assert is_complete(P) and is_isoport(P)
+
+
+@pytest.mark.parametrize("inst,n", [
+    ("swap", 2), ("swap", 17), ("swap", 64),
+    ("circle", 2), ("circle", 7), ("circle", 9), ("circle", 64),
+    ("xor", 2), ("xor", 32), ("xor", 128),
+])
+def test_verify_instances(inst, n):
+    rep = verify_instance(inst, n)
+    assert rep["ok"], rep
+    # Swap is anisoport for N > 2 (the single-link N=2 CIN is trivially iso)
+    assert rep["isoport"] == (inst != "swap" or n == 2)
+
+
+def test_xor_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        xor_matrix(12)
+
+
+def test_odd_circle_has_one_idle_port_per_switch():
+    P = circle_matrix(9)
+    assert (P == IDLE).sum(axis=1).tolist() == [1] * 9
+    # the idle port of switch i is port i (deleted link to virtual N)
+    for s in range(9):
+        assert P[s, s] == IDLE
+
+
+def test_swap_peer_port_antisymmetry():
+    """Swap pairing is an involution: following the link back returns."""
+    n = 16
+    P = swap_matrix(n)
+    for s in range(n):
+        for i in range(n - 1):
+            t, j = int(P[s, i]), int(swap_peer_port(s, i))
+            assert int(P[t, j]) == s and int(swap_peer_port(t, j)) == i
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 96))
+def test_circle_any_size_property(n):
+    rep = verify_instance("circle", n)
+    assert rep["ok"] and rep["isoport"]

@@ -1,0 +1,53 @@
+"""Recurrent-state handoff: prefill-then-decode must equal the full
+teacher-forced forward for stateful architectures (mLSTM/sLSTM/SSM caches
+carry real state, unlike KV caches which are mere memoization)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import NO_SHARD, decode_step, get_config, init_params, prefill
+from repro.models import layers as L
+from repro.models.transformer import apply_stack, build_runs
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "hymba-1.5b"])
+def test_prefill_decode_equals_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    t_total = 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, t_total)),
+                       jnp.int32)
+
+    # reference: full forward over all tokens
+    runs = build_runs(cfg)
+    batchx = {"tokens": toks}
+    from repro.models.transformer import _prepare_prefix
+    x, prefix = _prepare_prefix(params, toks, cfg, NO_SHARD, batchx)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _, _ = apply_stack(params["stack"], x, cfg, NO_SHARD, runs,
+                          q_pos=pos, kv_pos=pos, mode="train")
+    x = L.apply_norm(params["final_norm"], x)
+    ref = L.logits_from_hidden(x, params["embed"], params.get("lm_head"),
+                               cfg, NO_SHARD)
+
+    # prefill on T-2, then decode tokens T-2 and T-1
+    seq_len = t_total + prefix + 4
+    cut = t_total - 2
+    _, caches = prefill(params, {"tokens": toks[:, :cut]}, cfg, NO_SHARD,
+                        seq_len)
+    lp, caches = decode_step(params, toks[:, cut:cut + 1], caches,
+                             jnp.asarray(cut + prefix, jnp.int32), cfg,
+                             NO_SHARD, seq_len)
+    lq, _ = decode_step(params, toks[:, cut + 1:cut + 2], caches,
+                        jnp.asarray(cut + 1 + prefix, jnp.int32), cfg,
+                        NO_SHARD, seq_len)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0], np.float32),
+        np.asarray(ref[:, prefix + cut], np.float32), rtol=4e-2, atol=4e-2)
+    np.testing.assert_allclose(
+        np.asarray(lq[:, 0], np.float32),
+        np.asarray(ref[:, prefix + cut + 1], np.float32), rtol=4e-2,
+        atol=4e-2)

@@ -1,0 +1,93 @@
+"""Paper §3 + Algorithm 2: table-free minimal routing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ROUTING_COST, port_matrix, route, route_circle,
+                        route_circle_closed, route_jnp, route_packet,
+                        routing_ops)
+
+
+@pytest.mark.parametrize("inst,sizes", [
+    ("swap", (2, 3, 8, 16, 17, 33)),
+    ("circle", (2, 3, 8, 16, 17, 33)),
+    ("xor", (2, 4, 8, 16, 64)),
+])
+def test_route_lands_on_destination_exhaustive(inst, sizes):
+    for n in sizes:
+        P = port_matrix(inst, n)
+        for a in range(n):
+            for b in range(n):
+                if a == b:
+                    continue
+                i = int(route(inst, a, b, n))
+                assert 0 <= i < P.shape[1]
+                assert P[a, i] == b, (inst, n, a, b)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 20, 64, 7, 9, 33])
+def test_circle_closed_form_equals_algorithm2(n):
+    a = np.arange(n)[:, None]
+    b = np.arange(n)[None, :]
+    mask = ~np.eye(n, dtype=bool)
+    alg = np.asarray(route_circle(a, b, n))[mask]
+    closed = np.asarray(route_circle_closed(a, b, n))[mask]
+    assert np.array_equal(alg, closed)
+
+
+@pytest.mark.parametrize("inst,n", [("swap", 16), ("circle", 16),
+                                    ("circle", 9), ("xor", 16)])
+def test_jnp_routing_matches_numpy(inst, n):
+    a = jnp.arange(n)[:, None] * jnp.ones((1, n), jnp.int32)
+    b = jnp.arange(n)[None, :] * jnp.ones((n, 1), jnp.int32)
+    got = np.asarray(jax.jit(lambda a_, b_: route_jnp(inst, a_, b_, n))(a, b))
+    want = np.asarray(route(inst, np.asarray(a), np.asarray(b), n))
+    mask = ~np.eye(n, dtype=bool)
+    assert np.array_equal(got[mask], want[mask])
+
+
+def test_xor_routing_is_involution_free_symmetric():
+    """Isoport: the same port index is used at both ends (i = A^B-1)."""
+    n = 32
+    for a in range(n):
+        for b in range(n):
+            if a != b:
+                assert route("xor", a, b, n) == route("xor", b, a, n)
+
+
+def test_circle_routing_symmetric():
+    n = 16
+    for a in range(n):
+        for b in range(n):
+            if a != b:
+                assert route("circle", a, b, n) == route("circle", b, a, n)
+
+
+def test_packet_routing_two_digit_addresses():
+    hops = route_packet("xor", 8, (1, 3), (6, 2))
+    assert hops == [(1, (1 ^ 6) - 1), (6, 2)]   # network hop + eject B0
+    hops = route_packet("xor", 8, (5, 0), (5, 7))
+    assert hops == [(5, 7)]                     # same switch: eject only
+
+
+def test_table1_routing_costs():
+    assert ROUTING_COST == {"xor": 0, "swap": 1, "circle": 5}
+    assert routing_ops("circle")["total_extra_vs_xor"] == 5
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 64), data=st.data())
+def test_route_property_all_instances(n, data):
+    a = data.draw(st.integers(0, n - 1))
+    b = data.draw(st.integers(0, n - 1))
+    if a == b:
+        return
+    for inst in ("swap", "circle"):
+        P = port_matrix(inst, n)
+        assert P[a, int(route(inst, a, b, n))] == b
+    if n & (n - 1) == 0:
+        P = port_matrix("xor", n)
+        assert P[a, int(route("xor", a, b, n))] == b

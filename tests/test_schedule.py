@@ -1,0 +1,47 @@
+"""1-factor step schedules (the paper's isoport property as a collective
+schedule)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_schedule, partner_table
+
+
+@pytest.mark.parametrize("inst,n", [("xor", 8), ("xor", 16), ("circle", 8),
+                                    ("circle", 7), ("cyclic", 8)])
+def test_schedule_structure(inst, n):
+    s = make_schedule(inst, n)
+    assert s.is_contention_free()
+    assert s.covers_all_pairs()
+    if inst in ("xor", "circle"):
+        assert s.is_matching_per_step()       # isoport <=> involution/step
+    if inst == "cyclic":
+        assert not s.is_matching_per_step()   # anisoport baseline
+
+
+def test_auto_selects_xor_for_pow2_else_circle():
+    assert make_schedule("auto", 16).instance == "xor"
+    assert make_schedule("auto", 12).instance == "circle"
+
+
+def test_step_counts():
+    assert make_schedule("xor", 16).num_steps == 15
+    assert make_schedule("circle", 16).num_steps == 15
+    assert make_schedule("circle", 9).num_steps == 9   # odd: one idle/step
+
+
+def test_inverse_table_is_inverse():
+    import numpy as np
+    for inst, n in (("cyclic", 8), ("xor", 8), ("circle", 7)):
+        s = make_schedule(inst, n)
+        for step in range(s.num_steps):
+            send = np.asarray(s.table[step])
+            recv = np.asarray(s.inv_table[step])
+            assert np.array_equal(send[recv], np.arange(n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 64))
+def test_schedule_property_auto(n):
+    s = make_schedule("auto", n)
+    assert s.is_contention_free() and s.covers_all_pairs()
+    assert s.is_matching_per_step()

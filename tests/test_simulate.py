@@ -1,0 +1,49 @@
+"""Flow-level simulator: the paper's balance/contention claims."""
+import pytest
+
+from repro.core import (all_to_all_steps, cin_link_loads, hyperx_link_loads,
+                        schedule_step_report)
+from repro.core.hyperx import HyperXConfig
+
+
+@pytest.mark.parametrize("inst,n", [("swap", 16), ("circle", 16),
+                                    ("circle", 9), ("xor", 16)])
+def test_all_to_all_uses_every_link_once(inst, n):
+    loads = cin_link_loads(inst, n)
+    assert set(loads.values()) == {1}
+    assert len(loads) == n * (n - 1)
+
+
+@pytest.mark.parametrize("inst", ["circle", "xor"])
+def test_isoport_steps_are_contention_free(inst):
+    for r in schedule_step_report(inst, 16):
+        assert r.max_link_load == 1 and r.max_endpoint_in == 1
+
+
+def test_swap_steps_serialize():
+    reps = schedule_step_report("swap", 8)
+    assert [r.max_endpoint_in for r in reps] == [7, 6, 5, 4, 5, 6, 7]
+    assert all_to_all_steps("swap", 8) == 40
+    assert all_to_all_steps("xor", 8) == 7
+
+
+def test_hyperx_dor_loads_balanced():
+    ll = hyperx_link_loads(HyperXConfig(dims=(4, 4, 4), terminals=4))
+    assert ll["load_cv"] == 0.0
+    assert ll["avg_hops"] <= 3
+
+
+def test_valiant_relieves_hot_links():
+    from repro.core import valiant_link_loads
+    hot = [(0, 1, 16.0)]                      # one 16x-overloaded pair
+    r = valiant_link_loads("xor", 16, hot)
+    assert r["max_min"] == 16.0
+    assert r["max_valiant"] == pytest.approx(16.0 / 14)   # spread over N-2
+    assert r["vc_required"] == 2              # paper §3 deadlock condition
+
+
+def test_lacin_schedule_is_single_hop():
+    from repro.core import schedule_hop_counts
+    h = schedule_hop_counts(16)
+    assert h["lacin_max_hops"] == 1 and h["ring_max_hops"] == 15
+    assert h["ratio"] == pytest.approx(8.0)   # ring avg hops = N/2

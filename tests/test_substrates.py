@@ -1,0 +1,165 @@
+"""Substrate tests: data determinism, checkpoint atomicity, optimizer,
+fault-tolerant loop (failure injection), serving engine."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, host_batch
+from repro.models import get_config
+from repro.models.layers import AxisRules
+from repro.models.transformer import init_params
+from repro.optim import (OptConfig, adamw_update, clip_by_global_norm,
+                         init_opt_state, schedule)
+from repro.runtime.loop import LoopConfig, run_training
+
+
+# -- data ---------------------------------------------------------------------
+
+def test_data_is_pure_function_of_step():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+    a = host_batch(cfg, 7)
+    b = host_batch(cfg, 7)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    c = host_batch(cfg, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_sharding_disjoint_and_deterministic():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    h0 = host_batch(cfg, 3, host_index=0, num_hosts=2)
+    h1 = host_batch(cfg, 3, host_index=1, num_hosts=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_labels_shift_tokens():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    b = host_batch(cfg, 0)
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_prefetcher_delivers_in_order():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    pf = Prefetcher(cfg, start_step=5)
+    try:
+        s0, b0 = pf.next()
+        s1, _ = pf.next()
+        assert (s0, s1) == (5, 6)
+        assert np.array_equal(b0["tokens"], host_batch(cfg, 5)["tokens"])
+    finally:
+        pf.close()
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "n": jnp.asarray(3)}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree_util.tree_map(lambda a: a + step, state),
+                 blocking=True)
+    assert mgr.steps() == [20, 30]            # keep=2 garbage-collected 10
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    restored = mgr.restore(30, like)
+    assert np.allclose(restored["w"], np.arange(6.0).reshape(2, 3) + 30)
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, {"w": jnp.ones(4)}, blocking=True)
+    blob = tmp_path / "step_00000001" / "data.npz"
+    data = bytearray(blob.read_bytes())
+    data[-1] ^= 0xFF
+    blob.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        mgr.restore(1, {"w": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_checkpoint_tmp_dirs_invisible(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / "step_00000099.tmp").mkdir()
+    assert mgr.latest_step() is None          # partial save never published
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert np.allclose(np.asarray(clipped["a"]), [0.6, 0.8])
+
+
+def test_schedule_warmup_and_decay():
+    opt = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    assert float(schedule(opt, jnp.asarray(0))) == 0.0
+    assert abs(float(schedule(opt, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(schedule(opt, jnp.asarray(100))) <= 0.1 + 1e-6
+
+
+# -- fault-tolerant loop --------------------------------------------------------
+
+def test_training_survives_injected_failures(tmp_path):
+    cfg = get_config("lacin-demo").reduced()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    loop = LoopConfig(total_steps=12, ckpt_every=4,
+                      ckpt_dir=str(tmp_path / "ckpt"), log_every=2,
+                      fail_at_steps=(6, 9))
+    report = run_training(cfg, OptConfig(lr=1e-3, warmup_steps=2,
+                                         total_steps=12), loop, data)
+    assert report.restarts == 2
+    assert report.restored_from == [4, 8]     # resumed from latest ckpts
+    # completed all steps despite two injected crashes
+    assert report.losses[-1][0] == 11
+    assert all(np.isfinite(l) for _, l in report.losses)
+
+
+def test_training_loss_decreases(tmp_path):
+    cfg = get_config("lacin-demo").reduced()
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                      repeat_p=0.8)
+    loop = LoopConfig(total_steps=30, ckpt_every=50,
+                      ckpt_dir=str(tmp_path / "ckpt2"), log_every=1)
+    report = run_training(cfg, OptConfig(lr=3e-3, warmup_steps=5,
+                                         total_steps=30), loop, data)
+    first = np.mean([l for _, l in report.losses[:3]])
+    last = np.mean([l for _, l in report.losses[-3:]])
+    assert last < first, (first, last)
+
+
+# -- serving -------------------------------------------------------------------
+
+def test_serving_engine_completes_requests():
+    from repro.serving.engine import Request, ServingEngine
+    cfg = get_config("lacin-demo").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, slots=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8,
+                                               dtype=np.int32),
+                    max_new_tokens=5) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 2
+    for r in done:
+        assert len(r.out_tokens) == 5
+        assert all(0 <= t < cfg.vocab_padded for t in r.out_tokens)
