@@ -19,7 +19,7 @@ _CHILD = r"""
 import json, time
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro._compat.jaxapi import shard_map
 from repro.core import all_reduce_lacin, all_to_all_lacin
 
 devs = jax.devices(); n = len(devs)
@@ -57,7 +57,8 @@ def count_cp(inst):
                                     instance=inst)[None],
         mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     txt = f.lower(jax.ShapeDtypeStruct((n, n, 64), jnp.float32)).compile().as_text()
-    return len(re.findall(r"collective-permute", txt))
+    # match op instances only — the bare name also appears in metadata
+    return len(re.findall(r"collective-permute\(", txt))
 for inst in ("xor", "circle"):
     out.append((f"collective/a2a_steps_hlo/{inst}", float(count_cp(inst)),
                 f"expect {n-1}"))

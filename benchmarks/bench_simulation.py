@@ -1,16 +1,35 @@
-"""Paper §1/§2: CIN uniform-traffic balance and step-schedule contention.
+"""Paper §1/§2 closed forms + the packet-level simulator (repro.sim).
+
+Static section (flow counting):
 
 * Under all-to-all traffic every directed CIN link carries exactly one
   flow (diameter-1 perfect balance, Fig. 1's premise).
 * Isoport step schedules (1-factors) are contention-free: one flow per
   link per step.  The Swap columns concentrate endpoints — the serialized
   all-to-all needs Theta(N^2/...) steps vs N-1 for isoport (refs [8, 9]).
+
+Packet section (cycle-driven, queueing + credits + VCs):
+
+* cross-validates the one-shot all-to-all against `cin_link_loads`;
+* offered-load sweeps of minimal / Valiant / adaptive routing on a CIN
+  under uniform and hot-pair traffic (the §3 trade-off);
+* a 256-switch HyperX uniform sweep and the Dragonfly same-group
+  adversary.  Results are also written to ``benchmarks/BENCH_sim.json``
+  so the perf trajectory is recorded run over run.
 """
 from __future__ import annotations
 
+import os
+import time
+
+from repro import sim
 from repro.core import (all_to_all_steps, cin_link_loads, column_contention,
                         port_matrix, schedule_step_report)
-from .common import row, time_us
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from .common import quick, row, time_us
+
+_ARTIFACT = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
 
 
 def rows():
@@ -46,6 +65,94 @@ def rows():
     out.append(row("sec3/valiant_hotflow/N16", 0.0,
                    f"minimal_max={v['max_min']} "
                    f"valiant_max={v['max_valiant']:.2f} VCs={v['vc_required']}"))
+    out.extend(sim_rows())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Packet-level simulator benchmarks.
+# ---------------------------------------------------------------------------
+
+def _timed(fn):
+    """(elapsed_us, result) of a single call — simulator runs are
+    deterministic per seed, so one timed run serves both purposes."""
+    t0 = time.perf_counter()
+    result = fn()
+    return (time.perf_counter() - t0) * 1e6, result
+
+
+def sim_rows():
+    q = quick()
+    cycles = 400 if q else 1200
+    warmup = cycles // 4
+    t = 12
+    out = []
+    all_stats = []
+
+    # cross-validation: packets reproduce the closed-form link loads
+    topo16 = sim.cin_topology("xor", 16)
+    eng = sim.Engine(topo16, sim.MinimalPolicy(), sim.one_shot_all_to_all(16),
+                     terminals=4)
+    us, _ = _timed(eng.run)
+    exact = eng.load.by_switch_pair() == cin_link_loads("xor", 16)
+    out.append(row("sim/validate/a2a_vs_closed_form/N16", us,
+                   f"exact_match={exact}"))
+
+    # CIN sweeps: minimal vs valiant vs adaptive, uniform + hot-pair
+    uni_loads = [0.5, 0.9] if q else [0.3, 0.5, 0.7, 0.9]
+    hot_loads = [0.2, 0.4] if q else [0.05, 0.2, 0.4, 0.6]
+    patterns = {
+        "uniform": (uni_loads, lambda load: sim.uniform(
+            16, offered=load, cycles=cycles, terminals=t, seed=21)),
+        "hotspot": (hot_loads, lambda load: sim.hotspot(
+            16, offered=load, cycles=cycles, terminals=t, hot_fraction=0.9,
+            seed=22)),
+    }
+    for pat, (loads, tf) in patterns.items():
+        for pol in ("minimal", "valiant", "adaptive"):
+            us, stats = _timed(lambda: sim.saturation_sweep(
+                topo16, lambda: sim.make_policy(pol), tf, loads,
+                terminals=t, cycles=cycles, warmup=warmup, seed=23))
+            all_stats.extend(stats)
+            knee = sim.saturation_point(stats)
+            acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
+            out.append(row(f"sim/cin16/{pat}/{pol}", us,
+                           f"accepted[{acc}] knee={knee}"))
+
+    # 256-switch HyperX uniform sweep (the tentpole speed target)
+    hx = sim.hyperx_topology(HyperXConfig(dims=(16, 16), terminals=8))
+    hx_cycles = 300 if q else 600
+    hx_loads = [0.5] if q else [0.3, 0.6]
+
+    def hx_tf(load):
+        return sim.uniform(256, offered=load, cycles=hx_cycles, terminals=8,
+                           seed=24)
+
+    us, stats = _timed(lambda: sim.saturation_sweep(
+        hx, sim.MinimalPolicy, hx_tf, hx_loads, terminals=8,
+        cycles=hx_cycles, warmup=hx_cycles // 4, seed=24))
+    all_stats.extend(stats)
+    acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
+    out.append(row("sim/hyperx256/uniform/minimal", us,
+                   f"accepted[{acc}] lat_p99={stats[-1].latency_p99:.0f}"))
+
+    # Dragonfly same-group adversary: minimal chokes, valiant doesn't
+    dcfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                           global_ports_per_switch=2, num_groups=8)
+    dtopo = sim.dragonfly_topology(dcfg)
+    d_cycles = 400 if q else 1000
+    for pol in ("minimal", "valiant", "adaptive"):
+        tr = sim.adversarial_same_group(dcfg, offered=0.3, cycles=d_cycles,
+                                        terminals=2, seed=25)
+        us, stats = _timed(lambda: sim.simulate(
+            dtopo, sim.make_policy(pol), tr, terminals=2, cycles=d_cycles,
+            warmup=d_cycles // 4, seed=25))
+        all_stats.append(stats)
+        out.append(row(f"sim/dragonfly/adversarial/{pol}", us,
+                       f"accepted={stats.accepted:.3f} "
+                       f"lat_mean={stats.latency_mean:.1f}"))
+
+    sim.save_json(all_stats, _ARTIFACT, extra={"quick": q})
     return out
 
 

@@ -1,10 +1,19 @@
-"""Shared benchmark plumbing: timing + CSV row emission."""
+"""Shared benchmark plumbing: timing, CSV row emission, quick mode."""
 from __future__ import annotations
 
+import os
 import time
 
 
+def quick() -> bool:
+    """True when the harness runs in smoke-test mode (``run.py --quick`` /
+    ``REPRO_BENCH_QUICK=1``): modules shrink cycle counts and sweeps."""
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
 def time_us(fn, *args, repeat: int = 5, warmup: int = 1, **kw) -> float:
+    if quick():
+        repeat, warmup = 1, 0
     for _ in range(warmup):
         fn(*args, **kw)
     best = float("inf")

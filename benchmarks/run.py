@@ -3,9 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV rows.  The roofline section reads
 the dry-run JSONs if present (run ``python -m repro.launch.dryrun --all``
 first for the full table).
+
+``--quick`` (the CI configuration) drops all ``time_us`` timings to a
+single repeat with no warmup, and modules that opt in via
+``common.quick()`` additionally shrink their workloads (the simulator
+module shortens its sweeps; the multi-device collective subprocesses run
+at full size either way).  The simulator module also writes a
+``benchmarks/BENCH_sim.json`` artifact so the latency/throughput
+trajectory of the packet simulator is recorded per run.
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
@@ -24,6 +33,8 @@ MODULES = [
 
 
 def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
     failures = 0
     for name in MODULES:

@@ -1,0 +1,20 @@
+"""Repo-level pytest configuration.
+
+* Puts ``src/`` on ``sys.path`` so ``import repro`` works without an
+  editable install (mirrors the tier-1 ``PYTHONPATH=src`` invocation).
+* Gates the optional ``hypothesis`` dependency: when it is not installed
+  (hermetic CI images), a deterministic fallback sampler is registered so
+  the property tests still run.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro._compat import hypothesis_fallback
+    hypothesis_fallback.install()

@@ -14,7 +14,7 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro._compat.jaxapi import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import all_reduce_lacin, make_schedule

@@ -1,0 +1,117 @@
+"""Saturation sweep demo: offered load vs accepted throughput + latency.
+
+Sweeps the packet-level simulator over a topology and prints one table
+per traffic pattern, comparing routing policies — the experiment shape
+behind the paper's §3 minimal-vs-non-minimal discussion.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python examples/saturation_sweep.py
+    PYTHONPATH=src python examples/saturation_sweep.py --topo hyperx --dims 8,8
+    PYTHONPATH=src python examples/saturation_sweep.py --topo dragonfly \
+        --traffic adversarial --policies minimal,valiant
+    PYTHONPATH=src python examples/saturation_sweep.py --json sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro import sim
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+
+
+def build_topology(args):
+    if args.topo == "cin":
+        return sim.cin_topology(args.instance, args.n)
+    if args.topo == "hyperx":
+        dims = tuple(int(d) for d in args.dims.split(","))
+        return sim.hyperx_topology(HyperXConfig(dims=dims,
+                                                terminals=args.terminals,
+                                                instance=args.instance))
+    if args.topo == "dragonfly":
+        return sim.dragonfly_topology(DragonflyConfig(
+            group_size=4, terminals_per_switch=args.terminals,
+            global_ports_per_switch=2, num_groups=8))
+    raise SystemExit(f"unknown topology {args.topo!r}")
+
+
+def traffic_factory(args, topo, pattern):
+    n = topo.num_switches
+    if pattern == "uniform":
+        return lambda load: sim.uniform(n, offered=load, cycles=args.cycles,
+                                        terminals=args.terminals, seed=args.seed)
+    if pattern == "hotspot":
+        return lambda load: sim.hotspot(n, offered=load, cycles=args.cycles,
+                                        terminals=args.terminals,
+                                        hot_fraction=0.9, seed=args.seed)
+    if pattern == "permutation":
+        return lambda load: sim.permutation(n, offered=load, cycles=args.cycles,
+                                            terminals=args.terminals,
+                                            seed=args.seed)
+    if pattern == "adversarial":
+        cfg = topo.meta.get("config")
+        if not isinstance(cfg, DragonflyConfig):
+            raise SystemExit("adversarial traffic needs --topo dragonfly")
+        return lambda load: sim.adversarial_same_group(
+            cfg, offered=load, cycles=args.cycles, terminals=args.terminals,
+            seed=args.seed)
+    raise SystemExit(f"unknown traffic pattern {pattern!r}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--topo", default="cin",
+                    choices=["cin", "hyperx", "dragonfly"])
+    ap.add_argument("--instance", default="xor",
+                    choices=["xor", "circle", "swap"])
+    ap.add_argument("--n", type=int, default=16, help="CIN switch count")
+    ap.add_argument("--dims", default="8,8", help="HyperX dims, e.g. 8,8")
+    ap.add_argument("--terminals", type=int, default=8,
+                    help="injectors per switch")
+    ap.add_argument("--policies", default="minimal,valiant,adaptive")
+    ap.add_argument("--traffic", default="uniform,hotspot",
+                    help="comma list: uniform,hotspot,permutation,adversarial")
+    ap.add_argument("--loads", default="0.1,0.3,0.5,0.7,0.9")
+    ap.add_argument("--cycles", type=int, default=1000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write records to this path")
+    args = ap.parse_args(argv)
+
+    topo = build_topology(args)
+    loads = [float(x) for x in args.loads.split(",")]
+    policies = args.policies.split(",")
+    print(f"topology: {topo.name}  switches={topo.num_switches} "
+          f"ports={topo.num_ports} links={topo.num_links} "
+          f"terminals={args.terminals}")
+
+    everything = []
+    for pattern in args.traffic.split(","):
+        tf = traffic_factory(args, topo, pattern)
+        t0 = time.time()
+        stats = []
+        for pol in policies:
+            stats += sim.saturation_sweep(
+                topo, lambda p=pol: sim.make_policy(p), tf, loads,
+                terminals=args.terminals, cycles=args.cycles,
+                warmup=args.cycles // 4, seed=args.seed)
+        everything += stats
+        print(f"\n== {pattern} traffic "
+              f"({len(policies) * len(loads)} runs, "
+              f"{time.time() - t0:.1f}s) ==")
+        print(sim.format_table(stats))
+        for pol in policies:
+            knee = sim.saturation_point(
+                [s for s in stats if s.policy == pol])
+            print(f"  saturation point ({pol}): "
+                  f"{knee if knee is not None else '> max load'}")
+
+    if args.json:
+        sim.save_json(everything, args.json)
+        print(f"\nwrote {len(everything)} records to {args.json}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,185 @@
+"""A tiny, deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test suite uses a small surface of hypothesis: ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``sampled_from`` / ``data`` strategies (plus ``.filter`` /
+``.map``).  Real hypothesis (declared in ``pyproject.toml``) is preferred
+whenever importable; this fallback keeps the property tests running as
+seeded random sampling so the suite stays green in hermetic environments
+where new packages cannot be installed.
+
+Install via :func:`install`, which registers ``hypothesis`` and
+``hypothesis.strategies`` modules in ``sys.modules``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+_FILTER_TRIES = 10_000
+
+
+class Unsatisfiable(Exception):
+    """Raised when a .filter() predicate rejects every sampled value."""
+
+
+class _Assumption(Exception):
+    """Control-flow exception for assume(False): skip this example."""
+
+
+class SearchStrategy:
+    def __init__(self, draw, label="strategy"):
+        self._draw = draw
+        self._label = label
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def filter(self, predicate):
+        def draw(rnd):
+            for _ in range(_FILTER_TRIES):
+                value = self._draw(rnd)
+                if predicate(value):
+                    return value
+            raise Unsatisfiable(f"filter on {self._label} rejected all samples")
+        return SearchStrategy(draw, f"{self._label}.filter(...)")
+
+    def map(self, fn):
+        return SearchStrategy(lambda rnd: fn(self._draw(rnd)),
+                              f"{self._label}.map(...)")
+
+    def __repr__(self):
+        return f"<fallback {self._label}>"
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def sampled_from(elements):
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rnd: pool[rnd.randrange(len(pool))],
+                          f"sampled_from({pool!r})")
+
+
+def booleans():
+    return SearchStrategy(lambda rnd: bool(rnd.getrandbits(1)), "booleans()")
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value),
+                          f"floats({min_value}, {max_value})")
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(rnd):
+        size = rnd.randint(min_size, max_size)
+        return [elements.example_from(rnd) for _ in range(size)]
+    return SearchStrategy(draw, "lists(...)")
+
+
+class DataObject:
+    """Interactive drawing, mirroring ``st.data()``."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example_from(self._rnd)
+
+
+def data():
+    return SearchStrategy(lambda rnd: DataObject(rnd), "data()")
+
+
+def assume(condition):
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def given(*given_args, **given_kwargs):
+    if given_args:
+        raise TypeError("the hypothesis fallback supports keyword strategies only")
+
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", {})
+            max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            # Deterministic per-test seed so failures reproduce.
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max_examples):
+                drawn = {name: strat.example_from(rnd)
+                         for name, strat in given_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Assumption:
+                    continue
+        wrapper.is_hypothesis_test = True
+        wrapper.hypothesis_fallback = True
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper supplies them itself, so the visible signature must only
+        # contain whatever genuine fixtures remain.
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in given_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return decorator
+
+
+def settings(**kwargs):
+    def decorator(fn):
+        fn._fallback_settings = kwargs
+        return fn
+    return decorator
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+def note(_message):
+    pass
+
+
+def install() -> None:
+    """Register fallback ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.note = note
+    hyp.HealthCheck = HealthCheck
+    hyp.Unsatisfiable = Unsatisfiable
+    hyp.__is_fallback__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    st.floats = floats
+    st.lists = lists
+    st.data = data
+    st.SearchStrategy = SearchStrategy
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,70 @@
+"""Bridge for public-API drift across jax versions.
+
+The codebase targets the current public names (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); older jaxlibs (0.4.x) ship
+the same functionality under ``jax.experimental.shard_map`` with
+``check_rep``/``auto`` instead of ``check_vma``/``axis_names`` and have no
+mesh axis types.  Importing from here gives the new-style surface on both.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        """New-style ``jax.shard_map`` on top of the experimental API.
+
+        ``axis_names`` (the *manual* axes) maps to the complement ``auto``
+        set; ``check_vma`` maps to ``check_rep``.
+        """
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=bool(check_vma),
+                              auto=auto)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """No-op fallback: old jax has no ambient mesh; shard_map calls in
+        this codebase always pass the mesh explicitly."""
+        yield mesh
+
+
+def tpu_compiler_params():
+    """The Pallas-TPU compiler-params class across the 0.4 -> 0.5 rename
+    (``TPUCompilerParams`` -> ``CompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def make_auto_mesh(axis_shapes, axis_names, **kw):
+    """``jax.make_mesh`` with ``AxisType.Auto`` axes where supported."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names),
+                             **kw)
+    except (ImportError, TypeError, AttributeError):
+        pass
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    except AttributeError:
+        # jax < 0.4.35 has no jax.make_mesh: build the Mesh directly.
+        import math
+        import numpy as np
+        devs = kw.get("devices") or jax.devices()
+        n = math.prod(axis_shapes)
+        return jax.sharding.Mesh(
+            np.asarray(devs[:n]).reshape(axis_shapes), axis_names)

@@ -85,7 +85,8 @@ def schedule_step_report(instance: str, n: int) -> list[StepReport]:
             link_counts[(s, t)] = link_counts.get((s, t), 0) + 1
         reports.append(StepReport(
             step=i, flows=flows,
-            max_link_load=max(link_counts.values()),
+            # default=0: a step can be all-idle (odd-N Circle columns).
+            max_link_load=max(link_counts.values(), default=0),
             max_endpoint_in=int(in_counts.max()),
             idle_switches=idle))
     return reports

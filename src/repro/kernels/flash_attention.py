@@ -29,6 +29,10 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._compat.jaxapi import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 NEG_INF = -1e30
 
 
@@ -140,7 +144,7 @@ def flash_attention(q, k, v, *, q_pos=None, kv_pos=None, causal: bool = True,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), qq, kk, vv)

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro._compat.jaxapi import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()
+
 
 def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
             c_scr, n_scr, m_scr, *, chunk: int, dk: int, dv: int,
@@ -121,7 +125,7 @@ def mlstm_scan(q, k, v, log_i, log_f, *, chunk: int = 256,
             pltpu.VMEM((d, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf, lif, lff)

@@ -28,6 +28,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import all_to_all_lacin
+from repro._compat.jaxapi import shard_map
 from .layers import AxisRules, dense_init
 
 
@@ -198,7 +199,7 @@ def apply_moe(p: dict, x, cfg, rules: AxisRules):
         args.append(p["wg"])
         in_specs.append(P(rules.tp))
     out_specs = (P(dp if dp else None, None, None), P(), P())
-    fn = jax.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+    fn = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                        out_specs=out_specs, axis_names=manual,
                        check_vma=False)
     y, aux, z = fn(x, *args)

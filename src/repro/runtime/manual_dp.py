@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro._compat.jaxapi import shard_map
 from repro.core.collectives import (all_gather_lacin, all_reduce_lacin,
                                     reduce_scatter_lacin)
 from repro.models import ModelConfig
@@ -93,7 +94,7 @@ def make_manual_dp_train_step(cfg: ModelConfig, mesh, opt: OptConfig,
     state_specs = jax.tree_util.tree_map(lambda _: P(), {"params": 0,
                                                          "opt": 0,
                                                          "step": 0})
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(), {"tokens": P(axis_name), "labels": P(axis_name)}),
         out_specs=(P(), P()),

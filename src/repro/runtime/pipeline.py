@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro._compat.jaxapi import shard_map
 from repro.models import ModelConfig
 from repro.models.layers import AxisRules
 from repro.models import layers as L
@@ -97,7 +98,7 @@ def make_pipeline_loss_fn(cfg: ModelConfig, mesh, *, axis_name: str = "pipe",
         loss = lax.psum(jnp.where(s == n_stages - 1, loss, 0.0), axis_name)
         return loss
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = shard_map(local, mesh=mesh,
                        in_specs=(P(), {"tokens": P(), "labels": P()}),
                        out_specs=P(), axis_names={axis_name},
                        check_vma=False)

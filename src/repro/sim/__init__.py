@@ -1,0 +1,31 @@
+"""``repro.sim`` — cycle-driven, packet-level simulator for LACIN fabrics.
+
+Quantifies what the closed-form flow counting in
+:mod:`repro.core.simulate` cannot: queueing, credit backpressure, virtual
+channels, and the latency/throughput behaviour of minimal vs. Valiant vs.
+adaptive routing under load, on CIN, HyperX, and Dragonfly compositions
+built from the existing ``port_matrix`` / ``HyperXConfig`` /
+``DragonflyConfig`` objects.
+
+Quickstart::
+
+    from repro import sim
+    topo = sim.cin_topology("xor", 16)
+    tr = sim.uniform(16, offered=0.6, cycles=1000, terminals=4)
+    stats = sim.simulate(topo, sim.MinimalPolicy(), tr,
+                         terminals=4, warmup=250)
+    print(stats.accepted, stats.latency_p99)
+"""
+from .topology import (SimTopology, cin_topology, dragonfly_topology,
+                       hyperx_topology)
+from .switch import QueueFabric, arbitrate
+from .link import LinkLoadCounter, LinkTable
+from .policies import (AdaptivePolicy, MinimalPolicy, RoutingPolicy,
+                       ValiantPolicy, make_policy)
+from .traffic import (Traffic, adversarial_same_group, hotspot,
+                      one_shot_all_to_all, one_shot_permutation, permutation,
+                      uniform)
+from .engine import Engine, simulate
+from .metrics import RunStats, latency_summary
+from .report import (compare_policies, format_table, saturation_point,
+                     saturation_sweep, save_json, to_record)

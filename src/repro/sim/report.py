@@ -1,0 +1,102 @@
+"""Offered-load sweeps, saturation detection, and result serialization.
+
+The central experiment shape of the interconnect literature: sweep offered
+load, record accepted throughput + latency per point, find the knee.
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .engine import simulate
+from .metrics import RunStats
+from .policies import RoutingPolicy, make_policy
+from .topology import SimTopology
+from .traffic import Traffic
+
+
+def saturation_sweep(topo: SimTopology,
+                     policy_factory: Callable[[], RoutingPolicy],
+                     traffic_factory: Callable[[float], Traffic],
+                     loads: Sequence[float], *, terminals: int = 1,
+                     cycles: int | None = None, warmup: int | None = None,
+                     seed: int = 0, **sim_kw) -> list[RunStats]:
+    """One run per offered load; a fresh policy and traffic object each."""
+    out = []
+    for load in loads:
+        traffic = traffic_factory(load)
+        n_cycles = cycles if cycles is not None else traffic.horizon
+        wu = warmup if warmup is not None else n_cycles // 4
+        out.append(simulate(topo, policy_factory(), traffic,
+                            terminals=terminals, cycles=n_cycles, warmup=wu,
+                            seed=seed, **sim_kw))
+    return out
+
+
+def saturation_point(stats: Sequence[RunStats], *, threshold: float = 0.95
+                     ) -> float | None:
+    """Smallest offered load whose accepted throughput falls below
+    ``threshold * offered`` — ``None`` if the sweep never saturates."""
+    for s in sorted(stats, key=lambda s: s.offered):
+        if s.offered > 0 and s.accepted < threshold * s.offered:
+            return s.offered
+    return None
+
+
+def to_record(stats: RunStats) -> dict:
+    """JSON-serializable summary (histograms/raw loads dropped)."""
+    return {
+        "topology": stats.topology,
+        "policy": stats.policy,
+        "traffic": stats.traffic,
+        "offered": stats.offered,
+        "accepted": round(stats.accepted, 6),
+        "cycles": stats.cycles,
+        "warmup": stats.warmup,
+        "num_switches": stats.num_switches,
+        "terminals": stats.terminals,
+        "packets_generated": stats.packets_generated,
+        "packets_delivered": stats.packets_delivered,
+        "latency_mean": round(stats.latency_mean, 3),
+        "latency_p50": stats.latency_p50,
+        "latency_p99": stats.latency_p99,
+        "latency_max": stats.latency_max,
+        "link_util_max": round(stats.link_util_max, 4),
+        "link_util_mean": round(stats.link_util_mean, 4),
+        "link_util_cv": round(stats.link_util_cv, 4),
+        "saturated": stats.saturated,
+    }
+
+
+def save_json(stats: Sequence[RunStats], path: str, *, extra: dict | None = None
+              ) -> None:
+    payload = {"records": [to_record(s) for s in stats]}
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def format_table(stats: Sequence[RunStats]) -> str:
+    """Fixed-width text table of a sweep (for examples / benchmarks)."""
+    hdr = (f"{'policy':<10} {'traffic':<14} {'offered':>8} {'accepted':>9} "
+           f"{'lat_mean':>9} {'lat_p99':>8} {'max_util':>9} {'sat':>4}")
+    lines = [hdr, "-" * len(hdr)]
+    for s in stats:
+        lines.append(
+            f"{s.policy:<10} {s.traffic:<14} {s.offered:>8.3f} "
+            f"{s.accepted:>9.3f} {s.latency_mean:>9.1f} {s.latency_p99:>8.0f} "
+            f"{s.link_util_max:>9.3f} {'Y' if s.saturated else '-':>4}")
+    return "\n".join(lines)
+
+
+def compare_policies(topo: SimTopology, policies: Sequence[str],
+                     traffic_factory: Callable[[float], Traffic],
+                     loads: Sequence[float], **kw) -> dict[str, list[RunStats]]:
+    """Sweep several named policies over the same traffic factory."""
+    return {name: saturation_sweep(topo, lambda n=name: make_policy(n),
+                                   traffic_factory, loads, **kw)
+            for name in policies}

@@ -1,0 +1,253 @@
+"""Switch-level topology adapters for the packet simulator.
+
+A :class:`SimTopology` is the flattened, numpy-friendly view the engine
+consumes: a ``(N, P)`` neighbour matrix (``-1`` = unwired port), the
+far-end port index of every link (identical for isoport LACINs — the
+paper's cabling discipline — and :func:`~repro.core.port_matrix.swap_peer_port`
+for the anisoport Swap baseline), and a *vectorized* minimal-routing
+function built from the table-free routing of :mod:`repro.core.routing`.
+
+The adapters consume the existing construction objects unchanged:
+
+* :func:`cin_topology`       — a single CIN from its P-matrix;
+* :func:`hyperx_topology`    — a :class:`repro.core.hyperx.HyperXConfig`
+  (per-dimension LACINs + dimension-order routing);
+* :func:`dragonfly_topology` — a :class:`repro.core.dragonfly.DragonflyConfig`
+  (local CIN + colour-owned global ports, minimal l-g-l routing).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.core.port_matrix import IDLE, port_matrix, swap_peer_port
+from repro.core.routing import route
+
+
+@dataclass
+class SimTopology:
+    """Flattened switch graph + vectorized minimal next-port function.
+
+    ``minimal_port(cur, tgt)`` takes equal-length integer arrays with
+    ``cur[i] != tgt[i]`` and returns the output-port index at ``cur[i]``
+    on the minimal route towards ``tgt[i]``.
+    """
+    name: str
+    num_switches: int
+    num_ports: int
+    neighbor: np.ndarray                  # (N, P) int64, IDLE = -1
+    rev_port: np.ndarray                  # (N, P) int64, arrival port at far end
+    minimal_port: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    diameter: int = 1
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def num_links(self) -> int:
+        """Directed wired (switch, port) pairs / 2 = undirected links."""
+        return int(np.sum(self.neighbor >= 0)) // 2
+
+    def validate(self) -> None:
+        """Cheap structural sanity: links pair up (A's port i reaches B,
+        and B's ``rev_port`` points back at A through the same wire)."""
+        n, p = self.neighbor.shape
+        s = np.repeat(np.arange(n), p)
+        i = np.tile(np.arange(p), n)
+        t = self.neighbor.reshape(-1)
+        j = self.rev_port.reshape(-1)
+        wired = t >= 0
+        back = self.neighbor[t[wired], j[wired]]
+        if not np.array_equal(back, s[wired]):
+            raise ValueError(f"{self.name}: rev_port is not the link inverse")
+
+
+# ---------------------------------------------------------------------------
+# Single CIN.
+# ---------------------------------------------------------------------------
+
+def cin_topology(instance: str, n: int) -> SimTopology:
+    """A CIN of ``n`` switches from its port-pairing matrix."""
+    P = port_matrix(instance, n)
+    ports = P.shape[1]
+    if instance == "swap":
+        s = np.arange(n)[:, None]
+        i = np.arange(ports)[None, :]
+        rev = swap_peer_port(s, i).astype(np.int64)
+    else:
+        # Isoport: the far end uses the SAME port index (paper §2).
+        rev = np.broadcast_to(np.arange(ports, dtype=np.int64), P.shape).copy()
+    rev = np.where(P == IDLE, -1, rev)
+
+    def minimal_port(cur, tgt):
+        return np.asarray(route(instance, cur, tgt, n), dtype=np.int64)
+
+    topo = SimTopology(name=f"cin-{instance}-{n}", num_switches=n,
+                       num_ports=ports, neighbor=P.astype(np.int64),
+                       rev_port=rev, minimal_port=minimal_port, diameter=1,
+                       meta={"instance": instance, "n": n})
+    topo.validate()
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# HyperX: Cartesian product of CINs, dimension-order routing.
+# ---------------------------------------------------------------------------
+
+def hyperx_topology(cfg: HyperXConfig) -> SimTopology:
+    """Network-port graph of a HyperX (terminals are modeled by the engine's
+    injection/ejection bandwidth, not as graph ports)."""
+    n = cfg.num_switches
+    dims = cfg.dims
+    coords = np.array([cfg.switch_coord(s) for s in range(n)], dtype=np.int64)
+    index_of = {tuple(c): s for s, c in enumerate(coords.tolist())}
+
+    mats = [port_matrix(cfg.instance, k) for k in dims]
+    cols = [m.shape[1] for m in mats]          # k-1, or k for odd-k Circle
+    bases = np.concatenate([[0], np.cumsum(cols)[:-1]]).astype(np.int64)
+    ports = int(sum(cols))
+
+    neighbor = np.full((n, ports), -1, dtype=np.int64)
+    rev = np.full((n, ports), -1, dtype=np.int64)
+    for s in range(n):
+        c = coords[s]
+        for d, m in enumerate(mats):
+            for i in range(cols[d]):
+                digit = int(m[c[d], i])
+                if digit == IDLE:
+                    continue
+                nc = c.copy()
+                nc[d] = digit
+                neighbor[s, bases[d] + i] = index_of[tuple(nc.tolist())]
+                if cfg.instance == "swap":
+                    j = int(swap_peer_port(c[d], i))
+                else:
+                    j = i
+                rev[s, bases[d] + i] = bases[d] + j
+
+    def minimal_port(cur, tgt):
+        cc = coords[cur]
+        tc = coords[tgt]
+        diff = cc != tc
+        d = np.argmax(diff, axis=1)            # first differing dim = DOR order
+        out = np.empty(len(cc), dtype=np.int64)
+        for dd in range(len(dims)):
+            m = d == dd
+            if not m.any():
+                continue
+            out[m] = bases[dd] + np.asarray(
+                route(cfg.instance, cc[m, dd], tc[m, dd], dims[dd]))
+        return out
+
+    topo = SimTopology(name=f"hyperx-{'x'.join(map(str, dims))}-{cfg.instance}",
+                       num_switches=n, num_ports=ports, neighbor=neighbor,
+                       rev_port=rev, minimal_port=minimal_port,
+                       diameter=cfg.num_dims, meta={"config": cfg})
+    topo.validate()
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# Dragonfly: local CIN per group + colour-owned global ports.
+# ---------------------------------------------------------------------------
+
+def dragonfly_topology(cfg: DragonflyConfig) -> SimTopology:
+    """Switch graph of a Dragonfly; switch index = group * a + local index.
+
+    Local ports come first (the local CIN's columns), then the ``h`` global
+    ports.  Global colour ``c`` (the global CIN's port index) lives on
+    switch ``c // h``, slot ``c % h`` in every group — an isoport global
+    instance gives the same colour at both ends, so the far-end switch and
+    slot coincide (§5's cabling discipline).
+    """
+    a, h, g = cfg.group_size, cfg.global_ports_per_switch, cfg.num_groups
+    n = a * g
+    Pl = port_matrix(cfg.local_instance, a)
+    Pg = port_matrix(cfg.global_instance, g)
+    la = Pl.shape[1]
+    ports = la + h
+
+    # Colour -> (owner switch, slot) assignment.  An odd-g Circle global
+    # instance has g columns with group grp's own column idle, so the g-1
+    # *used* colours are compacted around it — otherwise the top colour
+    # (reachable when num_groups == a*h + 1) would land on switch a*h//h
+    # == a, past the group.  Even/anisoport instances use colours 0..g-2
+    # directly (identity compaction).
+    odd_circle = Pg.shape[1] == g
+
+    def colour_owner(grp, colour):
+        eff = colour - (colour > grp) if odd_circle else colour
+        return eff // h, eff % h
+
+    def slot_colour(grp, s, j):
+        """Inverse of colour_owner for (switch s, slot j) in group grp."""
+        k = s * h + j
+        if odd_circle:
+            k = k + (k >= grp)
+        return k
+
+    neighbor = np.full((n, ports), -1, dtype=np.int64)
+    rev = np.full((n, ports), -1, dtype=np.int64)
+    for grp in range(g):
+        for s in range(a):
+            sw = grp * a + s
+            for i in range(la):
+                t = int(Pl[s, i])
+                if t == IDLE:
+                    continue
+                neighbor[sw, i] = grp * a + t
+                if cfg.local_instance == "swap":
+                    rev[sw, i] = int(swap_peer_port(s, i))
+                else:
+                    rev[sw, i] = i
+            for slot in range(h):
+                colour = slot_colour(grp, s, slot)
+                if colour >= Pg.shape[1]:
+                    continue                    # spare global port
+                peer = int(Pg[grp, colour])
+                if peer == IDLE:
+                    continue
+                # Far-end colour: the unique global port of ``peer`` that
+                # reaches back to ``grp`` (== colour for isoport instances).
+                far = int(route(cfg.global_instance, peer, grp, g))
+                far_sw, far_slot = colour_owner(peer, far)
+                neighbor[sw, la + slot] = peer * a + far_sw
+                rev[sw, la + slot] = la + far_slot
+
+    def minimal_port(cur, tgt):
+        cur = np.asarray(cur)
+        tgt = np.asarray(tgt)
+        gc, sc = cur // a, cur % a
+        gd, sd = tgt // a, tgt % a
+        out = np.empty(cur.shape, dtype=np.int64)
+
+        same = gc == gd
+        if same.any():
+            out[same] = np.asarray(
+                route(cfg.local_instance, sc[same], sd[same], a))
+        diff = ~same
+        if diff.any():
+            colour = np.asarray(
+                route(cfg.global_instance, gc[diff], gd[diff], g))
+            if odd_circle:
+                colour = colour - (colour > gc[diff])
+            exit_sw = colour // h
+            slot = colour % h
+            at_exit = sc[diff] == exit_sw
+            sub = np.empty(int(diff.sum()), dtype=np.int64)
+            sub[at_exit] = la + slot[at_exit]
+            if (~at_exit).any():
+                sub[~at_exit] = np.asarray(
+                    route(cfg.local_instance, sc[diff][~at_exit],
+                          exit_sw[~at_exit], a))
+            out[diff] = sub
+        return out
+
+    topo = SimTopology(name=f"dragonfly-a{a}h{h}g{g}", num_switches=n,
+                       num_ports=ports, neighbor=neighbor, rev_port=rev,
+                       minimal_port=minimal_port, diameter=3,
+                       meta={"config": cfg})
+    topo.validate()
+    return topo

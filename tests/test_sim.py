@@ -1,0 +1,277 @@
+"""Packet-level simulator: cross-validation against closed forms + the
+saturation behaviour the paper's §3 routing discussion predicts."""
+import numpy as np
+import pytest
+
+from repro import sim
+from repro.core import port_matrix, schedule_step_report
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.core.simulate import cin_link_loads
+
+
+# ---------------------------------------------------------------------------
+# Topology adapters.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inst,n", [("swap", 8), ("circle", 8), ("circle", 9),
+                                    ("xor", 16)])
+def test_cin_topology_structure(inst, n):
+    topo = sim.cin_topology(inst, n)
+    topo.validate()
+    assert topo.num_links == n * (n - 1) // 2
+
+
+def test_hyperx_topology_matches_config():
+    cfg = HyperXConfig(dims=(4, 4), terminals=4)
+    topo = sim.hyperx_topology(cfg)
+    topo.validate()
+    assert topo.num_switches == cfg.num_switches
+    assert topo.num_links == cfg.num_links
+
+
+@pytest.mark.parametrize("g", [6, 8, 9])
+def test_dragonfly_topology_structure(g):
+    """Includes the config-allowed maximum num_groups == a*h + 1 (g=9,
+    odd-circle global), where the per-group colour sets must be compacted
+    around each group's idle column."""
+    cfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                          global_ports_per_switch=2, num_groups=g)
+    topo = sim.dragonfly_topology(cfg)
+    topo.validate()
+    assert topo.num_switches == cfg.switches
+    assert topo.num_links == cfg.total_links
+    eng = sim.Engine(topo, sim.MinimalPolicy(),
+                     sim.one_shot_all_to_all(cfg.switches), terminals=4)
+    stats = eng.run()
+    assert stats.packets_delivered == cfg.switches * (cfg.switches - 1)
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation against core.simulate closed forms.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inst,n", [("swap", 16), ("circle", 16),
+                                    ("circle", 9), ("xor", 16)])
+def test_one_shot_all_to_all_reproduces_cin_link_loads(inst, n):
+    """Uniform (all-to-all) traffic on a CIN must traverse exactly the
+    flows `cin_link_loads` counts: one per directed link (the 2/N-
+    normalized perfect balance of §1)."""
+    topo = sim.cin_topology(inst, n)
+    eng = sim.Engine(topo, sim.MinimalPolicy(), sim.one_shot_all_to_all(n),
+                     terminals=4)
+    stats = eng.run()
+    assert stats.packets_delivered == n * (n - 1)
+    assert eng.load.by_switch_pair() == cin_link_loads(inst, n)
+
+
+@pytest.mark.parametrize("inst", ["circle", "xor"])
+@pytest.mark.parametrize("n", [9, 16])
+def test_one_factor_steps_are_contention_free(inst, n):
+    """Each step of a 1-factor schedule, replayed as packets, uses every
+    link at most once — matching `schedule_step_report`'s closed form."""
+    if inst == "xor" and n == 9:
+        pytest.skip("xor needs power-of-two N")
+    P = port_matrix(inst, n)
+    reports = schedule_step_report(inst, n)
+    for i in range(P.shape[1]):
+        topo = sim.cin_topology(inst, n)
+        eng = sim.Engine(topo, sim.MinimalPolicy(),
+                         sim.one_shot_permutation(P[:, i]))
+        stats = eng.run()
+        assert stats.packets_delivered == stats.packets_generated
+        assert int(eng.load.total.max()) == reports[i].max_link_load <= 1
+
+
+def test_one_factor_step_completes_in_two_cycles():
+    """A matching step is fully contention-free: all packets cross in one
+    cycle and eject the next — no queueing anywhere."""
+    P = port_matrix("xor", 16)
+    topo = sim.cin_topology("xor", 16)
+    eng = sim.Engine(topo, sim.MinimalPolicy(),
+                     sim.one_shot_permutation(P[:, 3]))
+    stats = eng.run()
+    assert eng.cycle == 2
+    assert stats.latency_max == 2
+
+
+# ---------------------------------------------------------------------------
+# Queueing behaviour: credits, VCs, backpressure.
+# ---------------------------------------------------------------------------
+
+def test_credit_backpressure_bounds_queue_occupancy():
+    topo = sim.cin_topology("xor", 8)
+    tr = sim.uniform(8, offered=0.9, cycles=300, terminals=8, seed=0)
+    eng = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=8,
+                     queue_capacity=2, seed=0)
+    eng.run(cycles=300)
+    assert int(eng.fabric.occ.max()) <= 2
+
+
+def test_valiant_uses_two_vcs_on_cin():
+    """The §3 claim: non-minimal routing on a CIN needs exactly 2 VCs."""
+    topo = sim.cin_topology("xor", 8)
+    tr = sim.uniform(8, offered=0.3, cycles=200, terminals=2, seed=0)
+    eng = sim.Engine(topo, sim.ValiantPolicy(), tr, terminals=2, seed=0)
+    assert eng.num_vcs == 2
+    eng.run(cycles=200)
+    assert eng.load.total.sum() > 0
+    mins = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=2, seed=0)
+    assert mins.num_vcs == 1
+
+
+def test_minimal_delivers_everything_under_low_load():
+    topo = sim.cin_topology("circle", 12)
+    tr = sim.uniform(12, offered=0.2, cycles=400, terminals=4, seed=1)
+    stats = sim.simulate(topo, sim.MinimalPolicy(), tr, terminals=4,
+                         cycles=400, warmup=100, drain=True, seed=1)
+    assert stats.packets_delivered == stats.packets_generated
+    assert stats.accepted == pytest.approx(0.2, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance sweep: minimal vs Valiant knees (paper §3 trade-off).
+# ---------------------------------------------------------------------------
+
+N16 = 16
+T = 12          # injectors per switch: oversubscribed, so links can saturate
+CYCLES = 1200
+WARMUP = 300
+
+
+def _sweep(policy_name, traffic_factory, loads, seed):
+    topo = sim.cin_topology("xor", N16)
+    return sim.saturation_sweep(
+        topo, lambda: sim.make_policy(policy_name), traffic_factory,
+        loads, terminals=T, cycles=CYCLES, warmup=WARMUP, seed=seed)
+
+
+def test_uniform_sweep_minimal_saturates_later_than_valiant():
+    """Under uniform traffic minimal routing rides the dedicated links
+    (saturating late); Valiant doubles every packet's hop count and
+    saturates at roughly half the load."""
+    loads = [0.3, 0.5, 0.7, 0.9]
+
+    def tf(load):
+        return sim.uniform(N16, offered=load, cycles=CYCLES, terminals=T,
+                           seed=11)
+
+    s_min = _sweep("minimal", tf, loads, seed=11)
+    s_val = _sweep("valiant", tf, loads, seed=11)
+    knee_min = sim.saturation_point(s_min) or float("inf")
+    knee_val = sim.saturation_point(s_val) or float("inf")
+    assert knee_val < knee_min, (knee_val, knee_min)
+    # at the highest load the gap is substantial
+    assert s_min[-1].accepted > 1.3 * s_val[-1].accepted
+
+
+def test_hotspot_sweep_valiant_saturates_later_than_minimal():
+    """Under a hot-pair pattern the minimal route concentrates almost all
+    demand on one dedicated link per source; Valiant spreads it over the
+    N-2 two-hop paths and survives to much higher offered load."""
+    loads = [0.05, 0.2, 0.4, 0.6]
+
+    def tf(load):
+        return sim.hotspot(N16, offered=load, cycles=CYCLES, terminals=T,
+                           hot_fraction=0.9, seed=12)
+
+    s_min = _sweep("minimal", tf, loads, seed=12)
+    s_val = _sweep("valiant", tf, loads, seed=12)
+    knee_min = sim.saturation_point(s_min) or float("inf")
+    knee_val = sim.saturation_point(s_val) or float("inf")
+    assert knee_min < knee_val, (knee_min, knee_val)
+    assert s_val[-1].accepted > 1.8 * s_min[-1].accepted
+
+
+def test_adaptive_tracks_best_policy_both_regimes():
+    """The congestion-threshold policy stays minimal under uniform load and
+    detours under the hot-pair pattern — within 15% of the better pure
+    policy in both regimes."""
+    def uni(load):
+        return sim.uniform(N16, offered=load, cycles=CYCLES, terminals=T,
+                           seed=13)
+
+    def hot(load):
+        return sim.hotspot(N16, offered=load, cycles=CYCLES, terminals=T,
+                           hot_fraction=0.9, seed=13)
+
+    a_uni = _sweep("adaptive", uni, [0.7], seed=13)[0]
+    m_uni = _sweep("minimal", uni, [0.7], seed=13)[0]
+    assert a_uni.accepted > 0.85 * m_uni.accepted
+    a_hot = _sweep("adaptive", hot, [0.4], seed=13)[0]
+    v_hot = _sweep("valiant", hot, [0.4], seed=13)[0]
+    assert a_hot.accepted > 0.85 * v_hot.accepted
+
+
+# ---------------------------------------------------------------------------
+# Compositions.
+# ---------------------------------------------------------------------------
+
+def test_hyperx_uniform_tracks_offered_load():
+    cfg = HyperXConfig(dims=(4, 4), terminals=4)
+    topo = sim.hyperx_topology(cfg)
+    tr = sim.uniform(16, offered=0.4, cycles=600, terminals=4, seed=5)
+    stats = sim.simulate(topo, sim.MinimalPolicy(), tr, terminals=4,
+                         cycles=600, warmup=150, seed=5)
+    assert stats.accepted == pytest.approx(0.4, rel=0.1)
+    assert stats.latency_p50 <= 8
+
+
+def test_dragonfly_adversarial_valiant_beats_minimal():
+    """The classic Dragonfly adversary: all of group g targets group g+1,
+    funnelling through one global link.  Valiant detours through random
+    intermediates and sustains ~the offered load."""
+    cfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                          global_ports_per_switch=2, num_groups=8)
+    topo = sim.dragonfly_topology(cfg)
+
+    def run(policy):
+        tr = sim.adversarial_same_group(cfg, offered=0.3, cycles=1000,
+                                        terminals=2, seed=6)
+        return sim.simulate(topo, sim.make_policy(policy), tr, terminals=2,
+                            cycles=1000, warmup=250, seed=6)
+
+    s_min, s_val = run("minimal"), run("valiant")
+    assert s_val.accepted > 1.5 * s_min.accepted
+
+
+def test_dragonfly_one_shot_all_pairs_delivery():
+    cfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                          global_ports_per_switch=2, num_groups=6)
+    topo = sim.dragonfly_topology(cfg)
+    n = cfg.switches
+    eng = sim.Engine(topo, sim.MinimalPolicy(), sim.one_shot_all_to_all(n),
+                     terminals=4)
+    stats = eng.run()
+    assert stats.packets_delivered == n * (n - 1)
+    assert stats.latency_max <= 3 + eng.cycle  # every path <= l-g-l
+
+
+# ---------------------------------------------------------------------------
+# Reporting plumbing.
+# ---------------------------------------------------------------------------
+
+def test_report_records_and_table(tmp_path):
+    topo = sim.cin_topology("xor", 8)
+    tr = sim.uniform(8, offered=0.3, cycles=300, terminals=4, seed=7)
+    stats = sim.simulate(topo, sim.MinimalPolicy(), tr, terminals=4,
+                         cycles=300, warmup=75, seed=7)
+    rec = sim.to_record(stats)
+    assert rec["policy"] == "minimal" and 0 < rec["accepted"] <= 1.5
+    out = tmp_path / "sweep.json"
+    sim.save_json([stats], str(out))
+    assert out.exists() and "accepted" in out.read_text()
+    table = sim.format_table([stats])
+    assert "minimal" in table and "offered" in table
+
+
+def test_engine_is_deterministic_for_fixed_seed():
+    topo = sim.cin_topology("circle", 10)
+    tr = sim.uniform(10, offered=0.5, cycles=300, terminals=4, seed=8)
+    a = sim.simulate(topo, sim.ValiantPolicy(), tr, terminals=4, cycles=300,
+                     warmup=75, seed=8)
+    b = sim.simulate(topo, sim.ValiantPolicy(), tr, terminals=4, cycles=300,
+                     warmup=75, seed=8)
+    assert a.accepted == b.accepted
+    assert a.latency_mean == b.latency_mean
+    assert np.array_equal(a.link_loads, b.link_loads)
