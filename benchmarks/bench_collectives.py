@@ -49,6 +49,26 @@ for size in (1 << 16, 1 << 20, 1 << 22):
     us = timeit(f, x)
     out.append((f"collective/all_reduce/xla_psum/{4*size}B", us, "xla"))
 
+# hierarchical schedules on a HyperX/Dragonfly-shaped (2, 4) mesh:
+# dimension-order grid all-to-all and two-level all-reduce
+from repro.fabric import LacinCollectives
+mesh2d = Mesh(np.array(devs).reshape(2, 4), ("g", "l"))
+coll = LacinCollectives(mesh=mesh2d)
+for size in (1 << 16, 1 << 20):
+    x = jnp.arange(n * size, dtype=jnp.float32).reshape(n, size)
+    f = jax.jit(shard_map(
+        lambda xl: coll.all_reduce_two_level(xl[0], "l", "g")[None],
+        mesh=mesh2d, in_specs=P(("g", "l")), out_specs=P(("g", "l"))))
+    out.append((f"collective/two_level_all_reduce/2x4/{4*size}B",
+                timeit(f, x), "local RS -> global AR -> local AG"))
+    xa = jnp.arange(n * n * (size // n), dtype=jnp.float32).reshape(
+        n, n, size // n)
+    f = jax.jit(shard_map(
+        lambda xl: coll.all_to_all_grid(xl[0], ("g", "l"))[None],
+        mesh=mesh2d, in_specs=P(("g", "l")), out_specs=P(("g", "l"))))
+    out.append((f"collective/grid_a2a/2x4/{4*size}B",
+                timeit(f, xa), "per-dimension LACIN schedules, composed"))
+
 # step counts in HLO: N-1 ppermutes per matching collective chain
 import re
 def count_cp(inst):

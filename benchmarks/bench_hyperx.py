@@ -7,15 +7,15 @@ Figure-4-sized 4x4x4 instance.
 """
 from __future__ import annotations
 
-from repro.core import (HyperXConfig, all_pairs_max_hops, fig4_4cubed,
-                        hyperx_link_loads, paper_16cubed)
+from repro.core import HyperXConfig, all_pairs_max_hops, paper_16cubed
+from repro.fabric import make_fabric
 from .common import row, time_us
 
 
 def rows():
     out = []
     us = time_us(lambda: paper_16cubed().report())
-    r = paper_16cubed().report()
+    r = make_fabric(paper_16cubed().config).deployment()
     assert (r["switches"], r["endpoints"], r["radix"]) == (4096, 65536, 61)
     assert (r["z_links_per_rack"], r["z_columns_per_rack"],
             r["z_wires_per_column"]) == (120, 15, 8)
@@ -23,21 +23,25 @@ def rows():
     out.append(row("sec5/hyperx16/report", us,
                    f"switches=4096 endpoints=65536 radix=61 "
                    f"z=15cols*8wires hoses=120*16w colours=15*8"))
-    r4 = fig4_4cubed().report()
+    fab4 = make_fabric(HyperXConfig(dims=(4, 4, 4), terminals=4))
+    r4 = fab4.deployment()
     out.append(row("fig4/hyperx4/report", 0.0,
                    f"switches={r4['switches']} endpoints={r4['endpoints']} "
                    f"radix={r4['radix']} hoses={r4['hoses_per_rack_row']}"))
-    cfg = HyperXConfig(dims=(4, 4, 4), terminals=4)
+    cfg = fab4.config
     us = time_us(all_pairs_max_hops, cfg, repeat=1)
     assert all_pairs_max_hops(cfg) == 3
     out.append(row("sec5/hyperx4/dor_diameter", us, "max_hops=3 == D"))
-    us = time_us(hyperx_link_loads, HyperXConfig(dims=(4, 4), terminals=4),
-                 repeat=1)
-    ll = hyperx_link_loads(HyperXConfig(dims=(4, 4), terminals=4))
+    fab2 = make_fabric(HyperXConfig(dims=(4, 4), terminals=4))
+    us = time_us(fab2.link_loads, repeat=1)
+    ll = fab2.link_loads()
     assert ll["load_cv"] == 0.0
     out.append(row("sec5/hyperx/link_load_uniform", us,
                    f"cv={ll['load_cv']} max={ll['max_link_load']} "
                    f"avg_hops={ll['avg_hops']}"))
+    assert fab2.verify()["ok"] and fab4.verify()["ok"]
+    out.append(row("sec5/hyperx/fabric_verify", 0.0,
+                   "Fabric.verify ok for 4x4 and 4x4x4"))
     return out
 
 

@@ -27,6 +27,7 @@ from repro.core import (all_to_all_steps, cin_link_loads, column_contention,
                         port_matrix, schedule_step_report)
 from repro.core.dragonfly import DragonflyConfig
 from repro.core.hyperx import HyperXConfig
+from repro.fabric import make_fabric
 from .common import quick, row, time_us
 
 _ARTIFACT = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
@@ -90,7 +91,7 @@ def sim_rows():
     all_stats = []
 
     # cross-validation: packets reproduce the closed-form link loads
-    topo16 = sim.cin_topology("xor", 16)
+    topo16 = make_fabric("xor", 16).sim_topology()
     eng = sim.Engine(topo16, sim.MinimalPolicy(), sim.one_shot_all_to_all(16),
                      terminals=4)
     us, _ = _timed(eng.run)
@@ -120,7 +121,7 @@ def sim_rows():
                            f"accepted[{acc}] knee={knee}"))
 
     # 256-switch HyperX uniform sweep (the tentpole speed target)
-    hx = sim.hyperx_topology(HyperXConfig(dims=(16, 16), terminals=8))
+    hx = make_fabric(HyperXConfig(dims=(16, 16), terminals=8)).sim_topology()
     hx_cycles = 300 if q else 600
     hx_loads = [0.5] if q else [0.3, 0.6]
 
@@ -139,7 +140,7 @@ def sim_rows():
     # Dragonfly same-group adversary: minimal chokes, valiant doesn't
     dcfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
                            global_ports_per_switch=2, num_groups=8)
-    dtopo = sim.dragonfly_topology(dcfg)
+    dtopo = make_fabric(dcfg).sim_topology()
     d_cycles = 400 if q else 1000
     for pol in ("minimal", "valiant", "adaptive"):
         tr = sim.adversarial_same_group(dcfg, offered=0.3, cycles=d_cycles,

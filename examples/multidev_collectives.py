@@ -17,16 +17,17 @@ import jax.numpy as jnp
 from repro._compat.jaxapi import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import all_reduce_lacin, make_schedule
+from repro.core import make_schedule
+from repro.fabric import LacinCollectives
 
 
 def bench_allreduce(mesh, n):
     x = jax.random.normal(jax.random.PRNGKey(0), (n, 1 << 20))
     rows = []
     for inst in ("xor", "circle", "cyclic"):
+        coll = LacinCollectives(mesh=mesh, instance=inst)
         f = jax.jit(shard_map(
-            lambda xl, inst=inst: all_reduce_lacin(
-                xl[0], "x", axis_size=n, instance=inst)[None],
+            lambda xl, c=coll: c.all_reduce(xl[0], "x")[None],
             mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         jax.block_until_ready(f(x))
         t0 = time.perf_counter()
@@ -56,6 +57,18 @@ def main():
     print("\nall-reduce of 4 MiB x 8 shards:")
     for name, ms in bench_allreduce(mesh, n):
         print(f"  {name:9s} {ms:7.2f} ms")
+
+    # hierarchical: two-level Dragonfly-style all-reduce on a (2, 4) mesh
+    if n == 8:
+        import jax.numpy as jnp
+        mesh2 = Mesh(np.array(devs).reshape(2, 4), ("g", "l"))
+        coll = LacinCollectives(mesh=mesh2)
+        x = jnp.ones((n, 1 << 10))
+        y = shard_map(lambda xl: coll.all_reduce_two_level(xl[0], "l", "g")[None],
+                      mesh=mesh2, in_specs=P(("g", "l")),
+                      out_specs=P(("g", "l")))(x)
+        print(f"\ntwo-level all-reduce on (g=2, l=4): sum={float(y[0,0]):.0f} "
+              f"(expect {n})")
 
     print("\nexplicit-DP training with LACIN gradient all-reduce:")
     from repro.models import get_config

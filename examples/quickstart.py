@@ -21,8 +21,11 @@ from repro.core.hyperx import paper_16cubed
 
 
 def main():
-    print("=== Figure 2: P matrices (N=8) ===")
-    for inst in ("swap", "circle", "xor"):
+    print("=== Figure 2: P matrices (N=8), from the instance registry ===")
+    from repro import fabric
+    for inst in fabric.instance_names():     # incl. the registered 'mirror'
+        if not fabric.get_instance(inst).supports(8):
+            continue
         P = port_matrix(inst, 8)
         rep = verify_instance(inst, 8)
         print(f"\n{inst} (isoport={rep['isoport']}):\n{P}")

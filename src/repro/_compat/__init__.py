@@ -1,1 +1,14 @@
-"""Compatibility shims for optional third-party dependencies."""
+"""Compatibility shims for optional third-party dependencies, plus the
+deprecation-warning category used by ``repro.fabric`` API shims.
+
+``LacinDeprecationWarning`` lives here (dependency-free) so both
+``repro.core`` and ``repro.fabric`` can import it without cycles; the
+public re-export is ``repro.fabric.LacinDeprecationWarning``.  CI runs a
+``-W error::repro.fabric.LacinDeprecationWarning`` lane so no in-repo
+code path keeps using a shimmed old entry point.
+"""
+
+
+class LacinDeprecationWarning(DeprecationWarning):
+    """Raised by thin shims kept for one release after the repro.fabric
+    API redesign; see the migration table in README.md."""

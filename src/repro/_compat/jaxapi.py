@@ -42,6 +42,19 @@ else:
         yield mesh
 
 
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis, from inside shard_map/pmap.
+
+    Uses ``jax.lax.axis_size`` where it exists; otherwise falls back to
+    ``lax.psum(1, axis)``, which constant-folds to a Python int for
+    non-traced operands.  Either way the result is static, so it can size
+    schedule tables and Python loops at trace time.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    return int(jax.lax.psum(1, axis_name))
+
+
 def tpu_compiler_params():
     """The Pallas-TPU compiler-params class across the 0.4 -> 0.5 rename
     (``TPUCompilerParams`` -> ``CompilerParams``)."""

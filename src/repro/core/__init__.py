@@ -2,8 +2,13 @@
 Interconnection Network instances, their table-free routing, linear
 layouts, large-scale compositions (HyperX / Dragonfly), and the 1-factor
 step schedules that drive LACIN-scheduled JAX collectives.
+
+Instance dispatch (``port_matrix`` / ``route`` / ``make_schedule`` / ...)
+resolves names through the :mod:`repro.fabric` registry; the unified
+topology surface (``Fabric`` objects, mesh-aware collectives) lives in
+:mod:`repro.fabric`.
 """
-from .port_matrix import (IDLE, INSTANCES, circle_matrix, circle_neighbor,
+from .port_matrix import (IDLE, circle_matrix, circle_neighbor,
                           is_complete, is_isoport, is_power_of_two,
                           port_matrix, swap_matrix, swap_neighbor,
                           swap_peer_port, verify_instance, xor_matrix,
@@ -28,6 +33,14 @@ from .schedule import LacinSchedule, make_schedule, partner_table, schedule_for_
 from .collectives import (all_gather_lacin, all_reduce_lacin,
                           all_to_all_lacin, psum_or_lacin,
                           reduce_scatter_lacin, tree_all_reduce_lacin)
-from .simulate import (all_to_all_steps, cin_link_loads, hyperx_link_loads,
+from .simulate import (all_to_all_steps, cin_link_loads,
+                       dragonfly_link_loads, hyperx_link_loads,
                        schedule_hop_counts, schedule_step_report,
                        valiant_link_loads)
+
+
+def __getattr__(name: str):
+    if name == "INSTANCES":  # deprecated: forwards to port_matrix.__getattr__
+        import importlib
+        return importlib.import_module(".port_matrix", __name__).INSTANCES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,9 +21,15 @@ Unlike ring algorithms (same byte counts), every datum crosses exactly ONE
 link — single-hop minimal routing on the CIN, the paper's diameter-1
 advantage.  All functions must be called inside ``shard_map`` with
 ``axis_name`` bound.
+
+``axis_size`` is optional: when omitted it is read statically from the
+bound axis, so the schedule always matches the mesh.  The mesh-aware
+front-end (``repro.fabric.LacinCollectives`` and the hierarchical
+multi-axis / two-level schedules) builds on these single-axis chains.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import numpy as np
@@ -32,7 +38,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro._compat import LacinDeprecationWarning
+from repro._compat.jaxapi import axis_size as _bound_axis_size
+
 from .schedule import LacinSchedule, make_schedule
+
+
+def _resolve_axis_size(axis_name: str, axis_size: int | None) -> int:
+    """``axis_size`` if given, else the static size of the bound axis."""
+    if axis_size is None:
+        return _bound_axis_size(axis_name)
+    return int(axis_size)
 
 
 def _partners_for(sched: LacinSchedule) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -45,7 +61,7 @@ def _partners_for(sched: LacinSchedule) -> tuple[jnp.ndarray, jnp.ndarray]:
 # all-to-all
 # ---------------------------------------------------------------------------
 
-def all_to_all_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
+def all_to_all_lacin(x: jax.Array, axis_name: str, *, axis_size: int | None = None,
                      instance: str = "auto") -> jax.Array:
     """Personalized all-to-all over ``axis_name``.
 
@@ -54,6 +70,7 @@ def all_to_all_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
     for this device.  N-1 matching steps; step ``i`` exchanges with the
     1-factor-``i`` partner.
     """
+    axis_size = _resolve_axis_size(axis_name, axis_size)
     sched = make_schedule(instance, axis_size)
     send_to, recv_from = _partners_for(sched)
     me = lax.axis_index(axis_name)
@@ -78,7 +95,7 @@ def all_to_all_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
 # all-gather
 # ---------------------------------------------------------------------------
 
-def all_gather_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
+def all_gather_lacin(x: jax.Array, axis_name: str, *, axis_size: int | None = None,
                      instance: str = "auto", tiled: bool = False) -> jax.Array:
     """All-gather this device's shard across ``axis_name``.
 
@@ -86,6 +103,7 @@ def all_gather_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
     each shard travels exactly one hop to each consumer.  Returns shape
     ``(axis_size, *x.shape)`` or concatenated along axis 0 if ``tiled``.
     """
+    axis_size = _resolve_axis_size(axis_name, axis_size)
     sched = make_schedule(instance, axis_size)
     _, recv_from = _partners_for(sched)
     me = lax.axis_index(axis_name)
@@ -108,7 +126,7 @@ def all_gather_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
 # reduce-scatter
 # ---------------------------------------------------------------------------
 
-def reduce_scatter_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
+def reduce_scatter_lacin(x: jax.Array, axis_name: str, *, axis_size: int | None = None,
                          instance: str = "auto") -> jax.Array:
     """Reduce-scatter over ``axis_name``.
 
@@ -117,6 +135,7 @@ def reduce_scatter_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
     partner its addend directly (one hop) and accumulates the received one.
     Returns the reduced shard ``sum_s x_s[me]`` of shape ``x.shape[1:]``.
     """
+    axis_size = _resolve_axis_size(axis_name, axis_size)
     sched = make_schedule(instance, axis_size)
     send_to, recv_from = _partners_for(sched)
     me = lax.axis_index(axis_name)
@@ -138,7 +157,7 @@ def reduce_scatter_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
 # all-reduce = reduce-scatter + all-gather
 # ---------------------------------------------------------------------------
 
-def all_reduce_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
+def all_reduce_lacin(x: jax.Array, axis_name: str, *, axis_size: int | None = None,
                      instance: str = "auto") -> jax.Array:
     """All-reduce (sum) of an arbitrary-shaped array over ``axis_name``.
 
@@ -147,7 +166,7 @@ def all_reduce_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
     """
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
-    n = axis_size
+    n = _resolve_axis_size(axis_name, axis_size)
     pad = (-flat.size) % n
     if pad:
         flat = jnp.pad(flat, (0, pad))
@@ -161,21 +180,29 @@ def all_reduce_lacin(x: jax.Array, axis_name: str, *, axis_size: int,
 
 
 # ---------------------------------------------------------------------------
-# pytree convenience wrappers
+# Deprecated shims (one release): superseded by the mesh-aware
+# repro.fabric.LacinCollectives front-end.
 # ---------------------------------------------------------------------------
 
-def tree_all_reduce_lacin(tree, axis_name: str, *, axis_size: int,
+def tree_all_reduce_lacin(tree, axis_name: str, *, axis_size: int | None = None,
                           instance: str = "auto"):
-    """All-reduce every leaf of a pytree (used for DP gradient reduction)."""
+    """Deprecated: use ``repro.fabric.LacinCollectives(mesh).tree_all_reduce``."""
+    warnings.warn(
+        "tree_all_reduce_lacin is deprecated; use "
+        "repro.fabric.LacinCollectives(mesh, instance=...).tree_all_reduce(tree, axis)",
+        LacinDeprecationWarning, stacklevel=2)
     return jax.tree_util.tree_map(
         partial(all_reduce_lacin, axis_name=axis_name, axis_size=axis_size,
                 instance=instance), tree)
 
 
-def psum_or_lacin(x, axis_name: str, *, axis_size: int, impl: str = "xla",
-                  instance: str = "auto"):
-    """Switchable all-reduce: ``impl='xla'`` -> lax.psum (compiler-scheduled),
-    ``impl='lacin'`` -> explicit 1-factor schedule."""
+def psum_or_lacin(x, axis_name: str, *, axis_size: int | None = None,
+                  impl: str = "xla", instance: str = "auto"):
+    """Deprecated: use ``repro.fabric.LacinCollectives(mesh, impl=...).psum``."""
+    warnings.warn(
+        "psum_or_lacin is deprecated; use "
+        "repro.fabric.LacinCollectives(mesh, instance=..., impl=...).psum(x, axis)",
+        LacinDeprecationWarning, stacklevel=2)
     if impl == "xla":
         return lax.psum(x, axis_name)
     return all_reduce_lacin(x, axis_name, axis_size=axis_size, instance=instance)

@@ -20,11 +20,29 @@ instance's table-free routing.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 
 import numpy as np
 
 from .routing import route
-from .port_matrix import is_power_of_two
+from .port_matrix import IDLE, is_power_of_two
+
+
+@lru_cache(maxsize=None)
+def _idle_columns(instance: str, n: int) -> tuple[int, ...] | None:
+    """Per-switch idle-port column of an odd-size isoport construction.
+
+    Odd-``n`` instances built from the even ``n+1`` matrix keep ``n`` port
+    columns with exactly one idle per switch (Circle: column ``s``;
+    mirror: column ``-s mod n``).  Returns ``None`` when every column is
+    wired (even sizes / ``n-1``-column instances).
+    """
+    from repro.fabric.registry import get_instance
+    spec = get_instance(instance)
+    if spec.num_ports(n) != n:
+        return None
+    P = spec.matrix(n)
+    return tuple(int(np.argmax(P[s] == IDLE)) for s in range(n))
 
 
 @dataclass(frozen=True)
@@ -85,8 +103,16 @@ class DragonflyConfig:
         c % h.  The colour is the global CIN's port index route(group,
         peer_group) — an isoport global instance gives the same colour at
         both ends (the cabling discipline of §5).
+
+        Odd-g instances with g port columns (Circle/mirror) leave one
+        colour per group idle; the used colours are compacted around it
+        so all g-1 fit on the a*h ports even at num_groups == a*h + 1
+        (mirrors :func:`repro.sim.topology.dragonfly_topology`).
         """
         colour = int(route(self.global_instance, group, peer_group, self.num_groups))
+        idle = _idle_columns(self.global_instance, self.num_groups)
+        if idle is not None:
+            colour -= colour > idle[group]
         return colour // self.global_ports_per_switch, colour % self.global_ports_per_switch
 
     # -- minimal routing ----------------------------------------------------------

@@ -6,7 +6,8 @@ rows (switches) and ``N-1`` columns (network ports).  ``P[S, i]`` records the
 ``N*(N-1)`` ports are paired by ``N*(N-1)/2`` links forming the complete
 graph K_N; different pairings are different *CIN instances*.
 
-Instances implemented (paper Figure 2):
+This module holds the *primitive* neighbour functions of the paper's
+three instances (Figure 2):
 
 * ``swap``   — anisoport baseline: successively connect each switch to all
   the others using the first available ports.  ``P[S, i]`` pairs with
@@ -17,6 +18,12 @@ Instances implemented (paper Figure 2):
 * ``xor``    — isoport, ``N = 2**n``.  Port index ``i = A ^ B - 1``; since
   XOR is self-inverse, ``P[S, i]`` pairs with ``P[S ^ (i+1), i]``.
 
+Instance *dispatch* lives in the :mod:`repro.fabric.registry`: the
+primitives below are registered there as built-ins, and
+:func:`port_matrix` / :func:`verify_instance` resolve names through the
+registry — so ``repro.fabric.register_instance`` extends them (and every
+downstream consumer) without edits here.
+
 Everything here is plain ``numpy`` — these are construction/verification
 tools, not traced code.  The jnp-vectorized routing used inside jitted
 programs lives in :mod:`repro.core.routing`.
@@ -24,8 +31,6 @@ programs lives in :mod:`repro.core.routing`.
 from __future__ import annotations
 
 import numpy as np
-
-INSTANCES = ("swap", "circle", "xor")
 
 # Sentinel for an idle (unconnected) port.  Only appears for odd-N Circle.
 IDLE = -1
@@ -123,14 +128,24 @@ def xor_matrix(n: int) -> np.ndarray:
 
 
 def port_matrix(instance: str, n: int) -> np.ndarray:
-    """Dispatch to the requested CIN instance's P matrix."""
-    if instance == "swap":
-        return swap_matrix(n)
-    if instance == "circle":
-        return circle_matrix(n)
-    if instance == "xor":
-        return xor_matrix(n)
-    raise ValueError(f"unknown CIN instance {instance!r}; expected one of {INSTANCES}")
+    """P matrix of any registered CIN instance (resolved via the
+    :mod:`repro.fabric` registry)."""
+    from repro.fabric.registry import get_instance
+    return get_instance(instance).matrix(n)
+
+
+def __getattr__(name: str):
+    if name == "INSTANCES":
+        import warnings
+
+        from repro._compat import LacinDeprecationWarning
+        warnings.warn(
+            "repro.core.port_matrix.INSTANCES is deprecated; use "
+            "repro.fabric.instance_names() — the registry also lists "
+            "instances registered after import", LacinDeprecationWarning,
+            stacklevel=2)
+        return ("swap", "circle", "xor")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -194,13 +209,18 @@ def edge_set(P: np.ndarray) -> set[tuple[int, int]]:
 
 
 def verify_instance(instance: str, n: int) -> dict:
-    """Full structural verification of a CIN instance; returns a report."""
-    P = port_matrix(instance, n)
-    peer = swap_peer_port if instance == "swap" else None
+    """Full structural verification of a registered CIN instance.
+
+    The far-end port rule comes from the registry spec: isoport instances
+    pair same-index ports; anisoport ones supply ``peer_port``.
+    """
+    from repro.fabric.registry import get_instance
+    spec = get_instance(instance)
+    P = spec.matrix(n)
+    peer = None if spec.isoport else (lambda s, i: spec.peer_port(s, i, n))
     L = links(P, peer_port=peer)
     n_idle = int(np.sum(P == IDLE))
-    expected_links = (n * (n - 1)) // 2 if n % 2 == 0 or instance != "circle" \
-        else (n * (n - 1)) // 2
+    expected_links = (n * (n - 1)) // 2
     report = {
         "instance": instance,
         "n": n,

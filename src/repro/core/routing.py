@@ -22,6 +22,10 @@ Two implementation tiers:
                      simulator, benchmarks, and the hardware cost model.
 * ``route_*_jnp``  — branchless ``jnp`` versions, safe inside jit/shard_map
                      (e.g., to build ppermute partner tables at trace time).
+
+Name-based dispatch (:func:`route` / :func:`route_jnp` /
+:func:`routing_ops`) resolves through the :mod:`repro.fabric` registry,
+so instances added via ``register_instance`` route here too.
 """
 from __future__ import annotations
 
@@ -89,13 +93,9 @@ def route_circle_closed(a, b, n):
 
 
 def route(instance: str, a, b, n: int):
-    if instance == "swap":
-        return route_swap(a, b)
-    if instance == "xor":
-        return route_xor(a, b)
-    if instance == "circle":
-        return route_circle(a, b, n)
-    raise ValueError(f"unknown CIN instance {instance!r}")
+    """Routing for any registered CIN instance (via :mod:`repro.fabric`)."""
+    from repro.fabric.registry import get_instance
+    return get_instance(instance).route(a, b, n)
 
 
 # ---------------------------------------------------------------------------
@@ -121,13 +121,14 @@ def route_circle_jnp(a, b, n: int):
 
 
 def route_jnp(instance: str, a, b, n: int):
-    if instance == "swap":
-        return route_swap_jnp(a, b)
-    if instance == "xor":
-        return route_xor_jnp(a, b)
-    if instance == "circle":
-        return route_circle_jnp(a, b, n)
-    raise ValueError(f"unknown CIN instance {instance!r}")
+    """Trace-safe routing for any registered instance providing one."""
+    from repro.fabric.registry import get_instance
+    spec = get_instance(instance)
+    if spec.route_jnp is None:
+        raise ValueError(
+            f"CIN instance {instance!r} registered no trace-safe "
+            f"route_jnp; pass one to register_instance")
+    return spec.route_jnp(a, b, n)
 
 
 # ---------------------------------------------------------------------------
@@ -141,16 +142,18 @@ ROUTING_COST = {"xor": 0, "swap": 1, "circle": 5}
 
 
 def routing_ops(instance: str) -> dict:
-    """Break down the arithmetic on the routing critical path."""
-    if instance == "xor":
-        return {"xor_gates": 1, "add_sub": 1, "compare": 0, "total_extra_vs_xor": 0}
-    if instance == "swap":
-        return {"xor_gates": 0, "add_sub": 1, "compare": 1, "total_extra_vs_xor": 1}
-    if instance == "circle":
-        # Algorithm 2: T = A+B (1 add); compares T==N-1, B==N-1, A==N-1,
-        # parity test; one of T/2, (T+N-1)/2, (T-N+1)/2 (1 add + shift).
-        return {"xor_gates": 0, "add_sub": 2, "compare": 3, "total_extra_vs_xor": 5}
-    raise ValueError(f"unknown CIN instance {instance!r}")
+    """Arithmetic on the routing critical path, from the registry spec.
+
+    For the paper's instances (Table 1): XOR is gates + one decrementer;
+    Swap adds one comparator; Circle (Algorithm 2) adds T = A+B, compares
+    against N-1 and a parity test, then one of T/2, (T+N-1)/2, (T-N+1)/2.
+    """
+    from repro.fabric.registry import get_instance
+    spec = get_instance(instance)
+    if spec.routing_ops is None:
+        raise ValueError(f"CIN instance {instance!r} registered no "
+                         f"routing-cost breakdown")
+    return dict(spec.routing_ops)
 
 
 # ---------------------------------------------------------------------------

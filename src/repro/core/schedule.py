@@ -19,35 +19,41 @@ from functools import lru_cache
 
 import numpy as np
 
-from .port_matrix import IDLE, circle_neighbor, is_power_of_two, xor_neighbor
+from .port_matrix import IDLE, is_power_of_two
 
 
 def partner_table(instance: str, n: int) -> np.ndarray:
     """(steps, n) table: device ``s``'s exchange partner at each step.
 
+    Any *isoport* instance in the :mod:`repro.fabric` registry yields a
+    matching schedule: step ``i`` is 1-factor ``i`` (P-matrix column
+    ``i``), with idle ports mapped to self.  For the paper's built-ins:
+
     * ``xor``    — steps = n-1, partner = s ^ (step+1); requires n = 2^k.
     * ``circle`` — steps = n-1 (even n) or n (odd n; one idle per step).
-    * ``cyclic`` — anisoport baseline: partner = (s + step + 1) mod n.
-      Each step is a permutation but NOT a matching (send/recv partners
-      differ), i.e. ports at the two link ends differ — the paper's
-      anisoport case, kept for comparison.
+
+    ``cyclic`` is a schedule-only anisoport baseline (not a CIN pairing):
+    partner = (s + step + 1) mod n.  Each step is a permutation but NOT a
+    matching (send/recv partners differ) — the paper's anisoport case,
+    kept for comparison.  Registered anisoport instances (``swap``) are
+    rejected: their columns concentrate endpoints and serialize.
     """
     s = np.arange(n)
-    if instance == "xor":
-        if not is_power_of_two(n):
-            raise ValueError(f"xor schedule needs power-of-two axis size, got {n}")
-        steps = [xor_neighbor(s, i) for i in range(n - 1)]
-    elif instance == "circle":
-        cols = n - 1 if n % 2 == 0 else n
-        steps = []
-        for i in range(cols):
-            t = circle_neighbor(s, i, n)
-            steps.append(np.where(t == IDLE, s, t))  # idle -> self
-    elif instance == "cyclic":
+    if instance == "cyclic":
         steps = [np.mod(s + i + 1, n) for i in range(n - 1)]
-    else:
-        raise ValueError(f"unknown schedule instance {instance!r}")
-    return np.stack(steps).astype(np.int64)
+        return np.stack(steps).astype(np.int64)
+    from repro.fabric.registry import get_instance
+    try:
+        spec = get_instance(instance)
+    except ValueError:
+        raise ValueError(f"unknown schedule instance {instance!r}") from None
+    if not spec.isoport:
+        raise ValueError(
+            f"{instance!r} is anisoport: its P-matrix columns are not "
+            f"matchings, so they cannot serve as schedule steps")
+    P = spec.matrix(n)
+    table = np.where(P == IDLE, s[:, None], P)  # idle -> self
+    return table.T.astype(np.int64)
 
 
 @dataclass(frozen=True)

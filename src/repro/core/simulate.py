@@ -20,6 +20,7 @@ import numpy as np
 
 from .port_matrix import IDLE, port_matrix
 from .routing import route
+from .dragonfly import DragonflyConfig
 from .hyperx import HyperXConfig
 
 
@@ -210,4 +211,64 @@ def hyperx_link_loads(cfg: HyperXConfig, sample_pairs: int | None = None,
         "min_link_load": int(vals.min()),
         "mean_link_load": float(vals.mean()),
         "load_cv": float(vals.std() / vals.mean()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dragonfly closed-form link loads (local/global split).
+# ---------------------------------------------------------------------------
+
+def dragonfly_link_loads(cfg: DragonflyConfig) -> dict:
+    """Closed-form directed link loads under uniform switch-to-switch
+    all-to-all (one unit per ordered switch pair), minimal l-g-l routing.
+
+    Every directed *global* link carries exactly ``a**2`` units (all
+    ordered switch pairs between its two groups) — the perfect balance of
+    one dedicated link per group pair.  A directed *local* link
+    ``(g, s) -> (g, t)`` carries::
+
+        1  +  a * cnt_g[t]  +  a * cnt_g[s]
+
+    where ``cnt_g[x]`` counts the peer groups whose global colour (the
+    global CIN's port index ``route(g, peer)``) lives on switch ``x`` of
+    group ``g``: the direct intra-group flow, plus source-side transit
+    (``s`` sending to the ``a`` switches of each peer group exiting at
+    ``t``), plus destination-side transit (flows from each peer group
+    entering at ``s``, fanning out to ``t``).
+
+    Returns ``{"local": {(g, s, t): load}, "global": {(g, h): a*a},
+    "summary": {...}}``; cross-checked link-for-link against the packet
+    simulator's :func:`repro.sim.topology.dragonfly_topology` in tests.
+    """
+    a, g = cfg.group_size, cfg.num_groups
+    local: dict[tuple[int, int, int], int] = {}
+    glob: dict[tuple[int, int], int] = {}
+    owner_counts = np.zeros((g, a), dtype=np.int64)
+    for grp in range(g):
+        for peer in range(g):
+            if peer == grp:
+                continue
+            sw, _ = cfg.global_port_owner(grp, peer)
+            owner_counts[grp, sw] += 1
+            glob[(grp, peer)] = a * a
+    for grp in range(g):
+        cnt = owner_counts[grp]
+        for s in range(a):
+            for t in range(a):
+                if s == t:
+                    continue
+                local[(grp, s, t)] = int(1 + a * cnt[t] + a * cnt[s])
+    lvals = np.array(list(local.values())) if local else np.zeros(1)
+    return {
+        "local": local,
+        "global": glob,
+        "summary": {
+            "global_link_load": a * a,
+            "global_links_used": len(glob),
+            "local_links_used": len(local),
+            "local_max": int(lvals.max()),
+            "local_min": int(lvals.min()),
+            "local_mean": float(lvals.mean()),
+            "total_units": int(sum(local.values()) + sum(glob.values())),
+        },
     }

@@ -1,0 +1,49 @@
+"""``repro.fabric`` — the single entry point for every LACIN topology.
+
+The paper's thesis is that one cabling discipline (identically indexed
+ports + 1-factor schedules, §2) serves every scale: a single CIN, a
+HyperX product of CINs, or a Dragonfly hierarchy of CINs (§5).  This
+package is that thesis as an API:
+
+* an **instance registry** (:func:`register_instance` /
+  :func:`get_instance` / :func:`instance_names`) holding the paper's
+  ``swap`` / ``circle`` / ``xor`` built-ins plus anything a caller
+  registers — ``mirror`` (:mod:`repro.fabric.mirror`) is registered
+  below purely through the public API as proof.  ``port_matrix``,
+  ``route``, ``make_schedule``, the simulator adapters and the
+  verification test suite all resolve names here;
+* the **Fabric protocol** (:class:`Fabric` with :class:`CINFabric`,
+  :class:`HyperXFabric`, :class:`DragonflyFabric`, built by
+  :func:`make_fabric`) exposing one surface — ``neighbor_matrix()``,
+  ``schedule()``, ``sim_topology()``, ``link_loads()``,
+  ``deployment()``, ``verify()``, ``collectives(mesh)``;
+* **mesh-aware collectives** (:class:`LacinCollectives`): axis sizes
+  come from the bound mesh (or the axis environment), never from
+  hand-threaded ``axis_size=`` arguments, and the hierarchical
+  schedules — :func:`all_to_all_grid` (multi-axis dimension-order
+  all-to-all over a HyperX-shaped mesh) and
+  :func:`all_reduce_two_level` (two-level Dragonfly all-reduce) —
+  compose one LACIN schedule per level.
+
+Old entry points (``tree_all_reduce_lacin``, ``psum_or_lacin``,
+``INSTANCES``) keep working for one release behind
+:class:`LacinDeprecationWarning` shims; see README's migration table.
+"""
+from repro._compat import LacinDeprecationWarning
+
+from .registry import (InstanceSpec, get_instance, instance_names,
+                       register_instance, registered_instances,
+                       unregister_instance)
+from . import mirror as _mirror  # registers the 'mirror' instance (public API)
+from .collectives import (LacinCollectives, all_reduce_two_level,
+                          all_to_all_grid)
+from .fabric import (CINFabric, DragonflyFabric, Fabric, HyperXFabric,
+                     make_fabric)
+
+__all__ = [
+    "LacinDeprecationWarning",
+    "InstanceSpec", "register_instance", "unregister_instance",
+    "get_instance", "instance_names", "registered_instances",
+    "LacinCollectives", "all_to_all_grid", "all_reduce_two_level",
+    "Fabric", "CINFabric", "HyperXFabric", "DragonflyFabric", "make_fabric",
+]

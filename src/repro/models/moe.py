@@ -2,8 +2,9 @@
 
 The expert-parallel (EP) path is the paper's technique made first-class:
 expert shards live on the "model" mesh axis (a radix-16 XOR CIN in the
-production HyperX, §5), and the dispatch/combine all-to-alls execute as the
-XOR 1-factor step schedule (``repro.core.collectives.all_to_all_lacin``) —
+production HyperX, §5), and the dispatch/combine all-to-alls execute as a
+LACIN 1-factor step schedule via the mesh-aware
+``repro.fabric.LacinCollectives`` (shard count read from the mesh axis) —
 every step a perfect matching, single-hop, contention-free.
 
 Pipeline (per DP shard, fully inside a manual ``shard_map``):
@@ -27,7 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import all_to_all_lacin
+from repro.fabric import LacinCollectives
 from repro._compat.jaxapi import shard_map
 from .layers import AxisRules, dense_init
 
@@ -93,14 +94,19 @@ def _expert_ffn(p, x, cfg):
     return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
 
 
-def _moe_local(p, x, cfg, n_shards: int, axis_name: str | None,
-               instance: str = "xor"):
+def _moe_local(p, x, cfg, coll: LacinCollectives | None,
+               axis_name: str | None):
     """The per-device MoE body.  x: (Tloc, d) local tokens.
+
+    ``coll`` is the mesh-bound LACIN collective set (None = dense / single
+    shard); the EP shard count comes from the mesh axis it is bound to,
+    so schedule and mesh can never disagree.
 
     ``p['wi']/['wo']/['wg']`` may be zero-padded along the expert dim so it
     divides ``n_shards`` (e.g. granite's 40 -> 48); the router only ever
     selects real experts, so padding buckets stay empty.
     """
+    n_shards = coll.axis_size(axis_name) if coll is not None else 1
     t, d = x.shape
     k = cfg.top_k
     # Bucket count: local expert rows times shards (== padded global count).
@@ -123,8 +129,7 @@ def _moe_local(p, x, cfg, n_shards: int, axis_name: str | None,
     e_loc = e // n_shards
     if n_shards > 1:
         send = buf.reshape(n_shards, e_loc * cap, d)
-        recv = all_to_all_lacin(send, axis_name, axis_size=n_shards,
-                                instance=instance)
+        recv = coll.all_to_all(send, axis_name)
         # recv[j] = tokens from source shard j for MY local experts
         xin = (recv.reshape(n_shards, e_loc, cap, d)
                    .transpose(1, 0, 2, 3)
@@ -138,8 +143,7 @@ def _moe_local(p, x, cfg, n_shards: int, axis_name: str | None,
         back = (yout.reshape(e_loc, n_shards, cap, d)
                     .transpose(1, 0, 2, 3)
                     .reshape(n_shards, e_loc * cap, d))
-        ret = all_to_all_lacin(back, axis_name, axis_size=n_shards,
-                               instance=instance)
+        ret = coll.all_to_all(back, axis_name)
         out_buf = ret.reshape(e * cap, d)
     else:
         out_buf = yout.reshape(e * cap, d)
@@ -165,11 +169,14 @@ def apply_moe(p: dict, x, cfg, rules: AxisRules):
     """
     b, t, d = x.shape
     if cfg.moe_impl == "dense" or rules.tp is None or rules.tp_size == 1:
-        y2, aux, z = _moe_local(p, x.reshape(b * t, d), cfg, 1, None)
+        y2, aux, z = _moe_local(p, x.reshape(b * t, d), cfg, None, None)
         return y2.reshape(b, t, d), {"moe_aux": aux, "moe_z": z}
 
     mesh = rules.mesh
-    n_shards = rules.tp_size
+    # EP shard count and schedule both come from the mesh axis (the
+    # mesh-aware API): no hand-threaded axis_size to disagree with it.
+    coll = LacinCollectives(mesh=mesh, instance="auto")
+    n_shards = coll.axis_size(rules.tp)
     dp = rules.dp
     manual = set(dp) | {rules.tp}
 
@@ -187,7 +194,7 @@ def apply_moe(p: dict, x, cfg, rules: AxisRules):
         if rest:
             pl["wg"] = rest[0]
         bl, tl, dl = xl.shape
-        y2, aux, z = _moe_local(pl, xl.reshape(bl * tl, dl), cfg, n_shards,
+        y2, aux, z = _moe_local(pl, xl.reshape(bl * tl, dl), cfg, coll,
                                 rules.tp)
         aux = lax.pmean(aux, dp) if dp else aux
         z = lax.pmean(z, dp) if dp else z

@@ -18,8 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro._compat.jaxapi import shard_map
-from repro.core.collectives import (all_gather_lacin, all_reduce_lacin,
-                                    reduce_scatter_lacin)
+from repro.fabric import LacinCollectives
 from repro.models import ModelConfig
 from repro.models.layers import AxisRules
 from repro.models.transformer import forward_train
@@ -36,12 +35,16 @@ def _dequantize(q, scale):
     return q.astype(jnp.float32) * scale
 
 
-def lacin_grad_allreduce(grads, axis_name: str, axis_size: int,
-                         compress: bool = False, instance: str = "auto"):
+def lacin_grad_allreduce(grads, axis_name: str, coll: LacinCollectives,
+                         compress: bool = False):
     """All-reduce a gradient pytree over one manual axis with the LACIN
-    schedule.  ``compress=True`` quantizes the *scattered* shards to int8
-    before the all-gather phase (error <= 1/254 of max |g| per tensor),
-    halving...quartering the AG wire bytes."""
+    schedule.  ``coll`` is the mesh-bound collective set — the axis size
+    comes from its mesh (or the bound axis environment), never from a
+    hand-threaded count.  ``compress=True`` quantizes the *scattered*
+    shards to int8 before the all-gather phase (error <= 1/254 of max |g|
+    per tensor), halving...quartering the AG wire bytes."""
+    axis_size = coll.axis_size(axis_name)
+
     def reduce_leaf(g):
         shape, dtype = g.shape, g.dtype
         flat = g.reshape(-1).astype(jnp.float32)
@@ -49,18 +52,14 @@ def lacin_grad_allreduce(grads, axis_name: str, axis_size: int,
         if pad:
             flat = jnp.pad(flat, (0, pad))
         chunks = flat.reshape(axis_size, -1)
-        shard = reduce_scatter_lacin(chunks, axis_name, axis_size=axis_size,
-                                     instance=instance)
+        shard = coll.reduce_scatter(chunks, axis_name)
         if compress:
             q, scale = _quantize_int8(shard)
-            qs = all_gather_lacin(q, axis_name, axis_size=axis_size,
-                                  instance=instance)
-            ss = all_gather_lacin(scale[None], axis_name,
-                                  axis_size=axis_size, instance=instance)
+            qs = coll.all_gather(q, axis_name)
+            ss = coll.all_gather(scale[None], axis_name)
             full = _dequantize(qs, ss[:, 0][:, None])
         else:
-            full = all_gather_lacin(shard, axis_name, axis_size=axis_size,
-                                    instance=instance)
+            full = coll.all_gather(shard, axis_name)
         flat = full.reshape(-1)
         if pad:
             flat = flat[:-pad]
@@ -74,7 +73,7 @@ def make_manual_dp_train_step(cfg: ModelConfig, mesh, opt: OptConfig,
                               compress: bool = False,
                               instance: str = "auto"):
     """Whole-step shard_map over one dp axis; params replicated."""
-    n = mesh.shape[axis_name]
+    coll = LacinCollectives(mesh=mesh, instance=instance)
     inner_rules = AxisRules()  # single-device math inside the manual region
 
     def body(state, batch):
@@ -82,8 +81,8 @@ def make_manual_dp_train_step(cfg: ModelConfig, mesh, opt: OptConfig,
         (loss, metrics), grads = jax.value_and_grad(
             lambda p: forward_train(p, batch, cfg, inner_rules),
             has_aux=True)(params)
-        grads = lacin_grad_allreduce(grads, axis_name, n, compress=compress,
-                                     instance=instance)
+        grads = lacin_grad_allreduce(grads, axis_name, coll,
+                                     compress=compress)
         loss = jax.lax.pmean(loss, axis_name)
         new_params, new_opt, om = adamw_update(params, grads, state["opt"],
                                                opt)

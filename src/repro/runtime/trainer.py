@@ -19,7 +19,6 @@ from repro.models.layers import AxisRules
 from repro.models.transformer import (decode_step, forward_train, init_caches,
                                       init_params, prefill)
 from repro.optim import OptConfig, adamw_update, init_opt_state
-from repro.core.collectives import tree_all_reduce_lacin
 
 
 def make_rules(mesh) -> AxisRules:

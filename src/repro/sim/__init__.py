@@ -17,7 +17,7 @@ Quickstart::
     print(stats.accepted, stats.latency_p99)
 """
 from .topology import (SimTopology, cin_topology, dragonfly_topology,
-                       hyperx_topology)
+                       hyperx_topology, routed_link_loads)
 from .switch import QueueFabric, arbitrate
 from .link import LinkLoadCounter, LinkTable
 from .policies import (AdaptivePolicy, MinimalPolicy, RoutingPolicy,

@@ -3,9 +3,11 @@
 A :class:`SimTopology` is the flattened, numpy-friendly view the engine
 consumes: a ``(N, P)`` neighbour matrix (``-1`` = unwired port), the
 far-end port index of every link (identical for isoport LACINs — the
-paper's cabling discipline — and :func:`~repro.core.port_matrix.swap_peer_port`
-for the anisoport Swap baseline), and a *vectorized* minimal-routing
+paper's cabling discipline — and the registered ``peer_port`` rule for
+anisoport instances like Swap), and a *vectorized* minimal-routing
 function built from the table-free routing of :mod:`repro.core.routing`.
+Instance names resolve through the :mod:`repro.fabric` registry, so
+adapters work for any registered instance.
 
 The adapters consume the existing construction objects unchanged:
 
@@ -14,6 +16,10 @@ The adapters consume the existing construction objects unchanged:
   (per-dimension LACINs + dimension-order routing);
 * :func:`dragonfly_topology` — a :class:`repro.core.dragonfly.DragonflyConfig`
   (local CIN + colour-owned global ports, minimal l-g-l routing).
+
+:func:`routed_link_loads` walks the minimal route of every ordered
+switch pair on any of these — the ground truth the closed forms in
+:mod:`repro.core.simulate` are cross-checked against.
 """
 from __future__ import annotations
 
@@ -24,8 +30,9 @@ import numpy as np
 
 from repro.core.dragonfly import DragonflyConfig
 from repro.core.hyperx import HyperXConfig
-from repro.core.port_matrix import IDLE, port_matrix, swap_peer_port
+from repro.core.port_matrix import IDLE
 from repro.core.routing import route
+from repro.fabric.registry import get_instance
 
 
 @dataclass
@@ -69,20 +76,16 @@ class SimTopology:
 # ---------------------------------------------------------------------------
 
 def cin_topology(instance: str, n: int) -> SimTopology:
-    """A CIN of ``n`` switches from its port-pairing matrix."""
-    P = port_matrix(instance, n)
+    """A CIN of ``n`` switches from its registered port-pairing rule."""
+    spec = get_instance(instance)
+    P = spec.matrix(n)
     ports = P.shape[1]
-    if instance == "swap":
-        s = np.arange(n)[:, None]
-        i = np.arange(ports)[None, :]
-        rev = swap_peer_port(s, i).astype(np.int64)
-    else:
-        # Isoport: the far end uses the SAME port index (paper §2).
-        rev = np.broadcast_to(np.arange(ports, dtype=np.int64), P.shape).copy()
-    rev = np.where(P == IDLE, -1, rev)
+    # Isoport instances pair same-index ports (paper §2); anisoport ones
+    # supply their peer_port rule via the registry.
+    rev = spec.peer_matrix(n)
 
     def minimal_port(cur, tgt):
-        return np.asarray(route(instance, cur, tgt, n), dtype=np.int64)
+        return np.asarray(spec.route(cur, tgt, n), dtype=np.int64)
 
     topo = SimTopology(name=f"cin-{instance}-{n}", num_switches=n,
                        num_ports=ports, neighbor=P.astype(np.int64),
@@ -104,7 +107,9 @@ def hyperx_topology(cfg: HyperXConfig) -> SimTopology:
     coords = np.array([cfg.switch_coord(s) for s in range(n)], dtype=np.int64)
     index_of = {tuple(c): s for s, c in enumerate(coords.tolist())}
 
-    mats = [port_matrix(cfg.instance, k) for k in dims]
+    spec = get_instance(cfg.instance)
+    mats = [spec.matrix(k) for k in dims]
+    peers = [spec.peer_matrix(k) for k in dims]
     cols = [m.shape[1] for m in mats]          # k-1, or k for odd-k Circle
     bases = np.concatenate([[0], np.cumsum(cols)[:-1]]).astype(np.int64)
     ports = int(sum(cols))
@@ -121,11 +126,7 @@ def hyperx_topology(cfg: HyperXConfig) -> SimTopology:
                 nc = c.copy()
                 nc[d] = digit
                 neighbor[s, bases[d] + i] = index_of[tuple(nc.tolist())]
-                if cfg.instance == "swap":
-                    j = int(swap_peer_port(c[d], i))
-                else:
-                    j = i
-                rev[s, bases[d] + i] = bases[d] + j
+                rev[s, bases[d] + i] = bases[d] + int(peers[d][c[d], i])
 
     def minimal_port(cur, tgt):
         cc = coords[cur]
@@ -164,28 +165,32 @@ def dragonfly_topology(cfg: DragonflyConfig) -> SimTopology:
     """
     a, h, g = cfg.group_size, cfg.global_ports_per_switch, cfg.num_groups
     n = a * g
-    Pl = port_matrix(cfg.local_instance, a)
-    Pg = port_matrix(cfg.global_instance, g)
+    lspec = get_instance(cfg.local_instance)
+    Pl = lspec.matrix(a)
+    Pl_rev = lspec.peer_matrix(a)
+    Pg = get_instance(cfg.global_instance).matrix(g)
     la = Pl.shape[1]
     ports = la + h
 
-    # Colour -> (owner switch, slot) assignment.  An odd-g Circle global
-    # instance has g columns with group grp's own column idle, so the g-1
-    # *used* colours are compacted around it — otherwise the top colour
+    # Colour -> (owner switch, slot) assignment.  An odd-g construction
+    # has g columns with one idle colour per group, so the g-1 *used*
+    # colours are compacted around it — otherwise the top colour
     # (reachable when num_groups == a*h + 1) would land on switch a*h//h
-    # == a, past the group.  Even/anisoport instances use colours 0..g-2
-    # directly (identity compaction).
-    odd_circle = Pg.shape[1] == g
+    # == a, past the group.  The idle column is instance-specific
+    # (Circle: grp; mirror: -grp mod g), so it is read off the P matrix.
+    # Even/anisoport instances use colours 0..g-2 directly (identity).
+    from repro.core.dragonfly import _idle_columns
+    idle_cols = _idle_columns(cfg.global_instance, g)
 
     def colour_owner(grp, colour):
-        eff = colour - (colour > grp) if odd_circle else colour
+        eff = colour - (colour > idle_cols[grp]) if idle_cols else colour
         return eff // h, eff % h
 
     def slot_colour(grp, s, j):
         """Inverse of colour_owner for (switch s, slot j) in group grp."""
         k = s * h + j
-        if odd_circle:
-            k = k + (k >= grp)
+        if idle_cols:
+            k = k + (k >= idle_cols[grp])
         return k
 
     neighbor = np.full((n, ports), -1, dtype=np.int64)
@@ -198,10 +203,7 @@ def dragonfly_topology(cfg: DragonflyConfig) -> SimTopology:
                 if t == IDLE:
                     continue
                 neighbor[sw, i] = grp * a + t
-                if cfg.local_instance == "swap":
-                    rev[sw, i] = int(swap_peer_port(s, i))
-                else:
-                    rev[sw, i] = i
+                rev[sw, i] = int(Pl_rev[s, i])
             for slot in range(h):
                 colour = slot_colour(grp, s, slot)
                 if colour >= Pg.shape[1]:
@@ -231,8 +233,8 @@ def dragonfly_topology(cfg: DragonflyConfig) -> SimTopology:
         if diff.any():
             colour = np.asarray(
                 route(cfg.global_instance, gc[diff], gd[diff], g))
-            if odd_circle:
-                colour = colour - (colour > gc[diff])
+            if idle_cols:
+                colour = colour - (colour > np.asarray(idle_cols)[gc[diff]])
             exit_sw = colour // h
             slot = colour % h
             at_exit = sc[diff] == exit_sw
@@ -251,3 +253,33 @@ def dragonfly_topology(cfg: DragonflyConfig) -> SimTopology:
                        meta={"config": cfg})
     topo.validate()
     return topo
+
+
+# ---------------------------------------------------------------------------
+# Ground-truth link loads by walking every minimal route.
+# ---------------------------------------------------------------------------
+
+def routed_link_loads(topo: SimTopology) -> dict[tuple[int, int], int]:
+    """Directed (src_switch, dst_switch) link loads under uniform switch
+    all-to-all, by following ``minimal_port`` hop by hop on the wired
+    graph.  This is the routed ground truth the closed forms in
+    :mod:`repro.core.simulate` are checked against, link for link.
+    """
+    n = topo.num_switches
+    loads: dict[tuple[int, int], int] = {}
+    for src in range(n):
+        for dst in range(n):
+            if src == dst:
+                continue
+            cur = src
+            for _ in range(topo.diameter):
+                port = int(topo.minimal_port(np.array([cur]),
+                                             np.array([dst]))[0])
+                nxt = int(topo.neighbor[cur, port])
+                assert nxt >= 0, (topo.name, cur, dst, port)
+                loads[(cur, nxt)] = loads.get((cur, nxt), 0) + 1
+                cur = nxt
+                if cur == dst:
+                    break
+            assert cur == dst, (topo.name, src, dst)
+    return loads

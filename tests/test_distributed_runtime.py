@@ -75,13 +75,17 @@ results["dp_compressed_decreases"] = losses[True][-1] < losses[True][0]
 results["dp_losses_close"] = abs(losses[True][-1] - losses[False][-1]) < 0.3
 
 # compressed all-reduce error bound: <= ~1/127 of per-tensor max
+# (mesh-aware API: the collective set reads the axis size from the bound
+# axis environment — no hand-threaded count)
+from repro.fabric import LacinCollectives
+coll = LacinCollectives()
 g = {"w": jax.random.normal(jax.random.PRNGKey(2), (8, 1000))}
 def body(gl):
-    return lacin_grad_allreduce(gl, "data", 8, compress=True)
+    return lacin_grad_allreduce(gl, "data", coll, compress=True)
 out = shard_map(body, mesh=mesh, in_specs=({"w": P("data")},),
                 out_specs={"w": P("data")})(g)
 def body0(gl):
-    return lacin_grad_allreduce(gl, "data", 8, compress=False)
+    return lacin_grad_allreduce(gl, "data", coll, compress=False)
 ref = shard_map(body0, mesh=mesh, in_specs=({"w": P("data")},),
                 out_specs={"w": P("data")})(g)
 err = float(jnp.max(jnp.abs(out["w"] - ref["w"])))

@@ -1,11 +1,74 @@
-"""Paper §2: port-pairing matrices (Figure 2)."""
+"""Paper §2: port-pairing matrices (Figure 2).
+
+The generic structural suite below parametrizes over the
+``repro.fabric`` instance *registry*, so any instance registered through
+the public API (e.g. ``mirror``) is automatically checked for
+completeness, the isoport property, 1-factorization, and link inversion
+— with zero edits here.
+"""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import fabric
 from repro.core import (IDLE, circle_matrix, is_complete, is_isoport,
-                        port_matrix, swap_matrix, swap_neighbor,
-                        swap_peer_port, verify_instance, xor_matrix)
+                        is_one_factorization, port_matrix, swap_matrix,
+                        swap_neighbor, swap_peer_port, verify_instance,
+                        xor_matrix)
+
+# Candidate sizes; each instance keeps the ones its constraints support.
+CANDIDATE_SIZES = (2, 3, 7, 8, 9, 16, 17, 33, 64)
+
+
+def supported_sizes(name: str) -> list[int]:
+    spec = fabric.get_instance(name)
+    return [n for n in CANDIDATE_SIZES if spec.supports(n)]
+
+
+@pytest.mark.parametrize("name", fabric.instance_names())
+def test_registry_instance_structure(name):
+    """Every registered instance: complete, K_N-covering, link-paired."""
+    spec = fabric.get_instance(name)
+    sizes = supported_sizes(name)
+    assert sizes, f"{name} supports none of {CANDIDATE_SIZES}"
+    for n in sizes:
+        rep = verify_instance(name, n)
+        assert rep["ok"], rep
+        P = spec.matrix(n)
+        assert is_complete(P)
+        # The registry's isoport claim must match the matrix structure
+        # (the trivial single-link N=2 CIN is isoport for any pairing).
+        assert is_isoport(P) == (spec.isoport or n == 2)
+
+
+@pytest.mark.parametrize("name", fabric.instance_names(isoport=True))
+def test_registry_isoport_columns_are_one_factorization(name):
+    for n in supported_sizes(name):
+        assert is_one_factorization(fabric.get_instance(name).matrix(n))
+
+
+@pytest.mark.parametrize("name", fabric.instance_names())
+def test_registry_peer_port_is_link_inverse(name):
+    """Following any link via (neighbor, peer_port) returns to the start."""
+    spec = fabric.get_instance(name)
+    for n in supported_sizes(name):
+        P = spec.matrix(n)
+        rev = spec.peer_matrix(n)
+        for s in range(n):
+            for i in range(P.shape[1]):
+                t, j = int(P[s, i]), int(rev[s, i])
+                if t == IDLE:
+                    assert j == -1
+                    continue
+                assert int(P[t, j]) == s and int(rev[t, j]) == i
+
+
+def test_registry_rejects_unknown_and_duplicate():
+    with pytest.raises(ValueError, match="unknown CIN instance"):
+        fabric.get_instance("moebius")
+    with pytest.raises(ValueError, match="already registered"):
+        fabric.register_instance("circle", neighbor=lambda s, i, n: s,
+                                 route=lambda a, b, n: a)
 
 
 def test_fig2_swap_n8():

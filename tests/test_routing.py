@@ -1,4 +1,9 @@
-"""Paper §3 + Algorithm 2: table-free minimal routing."""
+"""Paper §3 + Algorithm 2: table-free minimal routing.
+
+The generic suite parametrizes over the ``repro.fabric`` registry:
+route/neighbor inversion, trace-safe-routing agreement, and isoport
+route symmetry hold automatically for any registered instance.
+"""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -6,26 +11,58 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
+from repro import fabric
 from repro.core import (ROUTING_COST, port_matrix, route, route_circle,
                         route_circle_closed, route_jnp, route_packet,
                         routing_ops)
 
+CANDIDATE_SIZES = (2, 3, 4, 8, 16, 17, 33, 64)
 
-@pytest.mark.parametrize("inst,sizes", [
-    ("swap", (2, 3, 8, 16, 17, 33)),
-    ("circle", (2, 3, 8, 16, 17, 33)),
-    ("xor", (2, 4, 8, 16, 64)),
-])
-def test_route_lands_on_destination_exhaustive(inst, sizes):
-    for n in sizes:
-        P = port_matrix(inst, n)
+
+def supported_sizes(name: str) -> list[int]:
+    spec = fabric.get_instance(name)
+    return [n for n in CANDIDATE_SIZES if spec.supports(n)]
+
+
+@pytest.mark.parametrize("name", fabric.instance_names())
+def test_registry_route_inverts_neighbor_exhaustive(name):
+    """route(a, b) is the port whose neighbor is b — for every pair."""
+    for n in supported_sizes(name):
+        P = port_matrix(name, n)
         for a in range(n):
             for b in range(n):
                 if a == b:
                     continue
-                i = int(route(inst, a, b, n))
+                i = int(route(name, a, b, n))
                 assert 0 <= i < P.shape[1]
-                assert P[a, i] == b, (inst, n, a, b)
+                assert P[a, i] == b, (name, n, a, b)
+
+
+@pytest.mark.parametrize("name", fabric.instance_names())
+def test_registry_route_jnp_matches_numpy(name):
+    spec = fabric.get_instance(name)
+    if spec.route_jnp is None:
+        pytest.skip(f"{name} registered no trace-safe routing")
+    for n in supported_sizes(name)[-2:]:
+        a = jnp.arange(n)[:, None] * jnp.ones((1, n), jnp.int32)
+        b = jnp.arange(n)[None, :] * jnp.ones((n, 1), jnp.int32)
+        got = np.asarray(jax.jit(
+            lambda a_, b_: route_jnp(name, a_, b_, n))(a, b))
+        want = np.asarray(route(name, np.asarray(a), np.asarray(b), n))
+        mask = ~np.eye(n, dtype=bool)
+        assert np.array_equal(got[mask], want[mask])
+
+
+@pytest.mark.parametrize("name", fabric.instance_names(isoport=True))
+def test_registry_isoport_route_symmetric(name):
+    """Isoport: both link ends use the same port index (§2 discipline)."""
+    for n in supported_sizes(name):
+        a = np.arange(n)[:, None]
+        b = np.arange(n)[None, :]
+        mask = ~np.eye(n, dtype=bool)
+        ab = np.asarray(route(name, a, b, n))
+        ba = np.asarray(route(name, b, a, n))
+        assert np.array_equal(ab[mask], ba[mask])
 
 
 @pytest.mark.parametrize("n", [4, 8, 16, 20, 64, 7, 9, 33])
