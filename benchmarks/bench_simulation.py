@@ -22,6 +22,8 @@ from __future__ import annotations
 import os
 import time
 
+import numpy as np
+
 from repro import sim
 from repro.core import (all_to_all_steps, cin_link_loads, column_contention,
                         port_matrix, schedule_step_report)
@@ -74,12 +76,17 @@ def rows():
 # Packet-level simulator benchmarks.
 # ---------------------------------------------------------------------------
 
-def _timed(fn):
-    """(elapsed_us, result) of a single call — simulator runs are
-    deterministic per seed, so one timed run serves both purposes."""
-    t0 = time.perf_counter()
-    result = fn()
-    return (time.perf_counter() - t0) * 1e6, result
+def _timed(fn, best_of: int = 1):
+    """(elapsed_us, result) of a call — simulator runs are deterministic
+    per seed, so one timed run serves both purposes.  ``best_of`` repeats
+    the call and keeps the fastest time (for noise-sensitive speed rows)."""
+    best = float("inf")
+    result = None
+    for _ in range(best_of):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, result
 
 
 def sim_rows():
@@ -90,16 +97,77 @@ def sim_rows():
     out = []
     all_stats = []
 
-    # cross-validation: packets reproduce the closed-form link loads
-    topo16 = make_fabric("xor", 16).sim_topology()
+    # cross-validation: packets reproduce the closed-form link loads, and
+    # the compiled engine reproduces the oracle exactly (minimal routes
+    # are unique, so drained link loads are arbitration-independent).
+    fab16 = make_fabric("xor", 16)
+    topo16 = fab16.sim_topology()
     eng = sim.Engine(topo16, sim.MinimalPolicy(), sim.one_shot_all_to_all(16),
                      terminals=4)
     us, _ = _timed(eng.run)
     exact = eng.load.by_switch_pair() == cin_link_loads("xor", 16)
     out.append(row("sim/validate/a2a_vs_closed_form/N16", us,
                    f"exact_match={exact}"))
+    us, xs = _timed(lambda: sim.simulate_jax(
+        topo16, sim.MinimalPolicy(), sim.one_shot_all_to_all(16),
+        terminals=4))
+    out.append(row("sim/validate/xengine_vs_oracle/N16", us,
+                   f"delivered_match={xs.packets_delivered == 240} "
+                   f"loads_match={np.array_equal(xs.link_loads, eng.load.total)}"))
 
-    # CIN sweeps: minimal vs valiant vs adaptive, uniform + hot-pair
+    # Headline speed benchmark: the same (loads x seeds) uniform-minimal
+    # saturation sweep through both backends — a realistic
+    # confidence-interval sweep (multiple seeds per point, horizon long
+    # enough for steady-state statistics), identical in quick and full
+    # modes so the recorded trajectory is comparable run over run.  The
+    # jax number is the steady-state wall-clock of the batched compiled
+    # program (compile time reported separately — it amortizes across
+    # every later sweep of the same shape in the process).
+    speed_cycles = 1600
+    speed_loads = [0.5, 0.7, 0.9]
+    speed_seeds = tuple(range(31, 39))
+
+    def tf_speed(load, seed):
+        return sim.uniform(16, offered=load, cycles=speed_cycles,
+                           terminals=t, seed=seed)
+
+    us_np, grid_np = _timed(lambda: fab16.sim_sweep(
+        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
+        backend="numpy", terminals=t, cycles=speed_cycles,
+        warmup=speed_cycles // 4), best_of=2)
+    us_cold, _ = _timed(lambda: fab16.sim_sweep(
+        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
+        backend="jax", terminals=t, cycles=speed_cycles,
+        warmup=speed_cycles // 4))
+    us_jax, grid_jax = _timed(lambda: fab16.sim_sweep(
+        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
+        backend="jax", terminals=t, cycles=speed_cycles,
+        warmup=speed_cycles // 4), best_of=2)
+    lane_cycles = len(speed_loads) * len(speed_seeds) * speed_cycles
+    acc_np = np.mean([[s.accepted for s in ss] for ss in grid_np], axis=1)
+    acc_jx = np.mean([[s.accepted for s in ss] for ss in grid_jax], axis=1)
+    agree = bool(np.allclose(acc_np, acc_jx, rtol=0.05, atol=0.01))
+    sim_speed = {
+        "workload": (f"cin16/uniform/minimal {len(speed_loads)} loads x "
+                     f"{len(speed_seeds)} seeds x {speed_cycles} cycles"),
+        "numpy_s": round(us_np / 1e6, 4),
+        "jax_steady_s": round(us_jax / 1e6, 4),
+        "jax_cold_s": round(us_cold / 1e6, 4),
+        "sim_cycles_per_sec_numpy": round(lane_cycles / (us_np / 1e6), 1),
+        "sim_cycles_per_sec_jax": round(lane_cycles / (us_jax / 1e6), 1),
+        "speedup_vs_numpy": round(us_np / us_jax, 2),
+        "speedup_vs_numpy_with_compile": round(us_np / us_cold, 2),
+        "backends_agree": agree,
+    }
+    out.append(row("sim/speed/cin16_sweep/numpy", us_np,
+                   f"{lane_cycles / (us_np / 1e6):.0f} cyc/s"))
+    out.append(row("sim/speed/cin16_sweep/jax", us_jax,
+                   f"{lane_cycles / (us_jax / 1e6):.0f} cyc/s "
+                   f"speedup={us_np / us_jax:.1f}x "
+                   f"(with_compile={us_np / us_cold:.1f}x) agree={agree}"))
+
+    # CIN sweeps: minimal vs valiant vs adaptive, uniform + hot-pair —
+    # each sweep is one compiled batched program now.
     uni_loads = [0.5, 0.9] if q else [0.3, 0.5, 0.7, 0.9]
     hot_loads = [0.2, 0.4] if q else [0.05, 0.2, 0.4, 0.6]
     patterns = {
@@ -113,25 +181,27 @@ def sim_rows():
         for pol in ("minimal", "valiant", "adaptive"):
             us, stats = _timed(lambda: sim.saturation_sweep(
                 topo16, lambda: sim.make_policy(pol), tf, loads,
-                terminals=t, cycles=cycles, warmup=warmup, seed=23))
+                terminals=t, cycles=cycles, warmup=warmup, seed=23,
+                backend="jax"))
             all_stats.extend(stats)
             knee = sim.saturation_point(stats)
             acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
             out.append(row(f"sim/cin16/{pat}/{pol}", us,
                            f"accepted[{acc}] knee={knee}"))
 
-    # 256-switch HyperX uniform sweep (the tentpole speed target)
-    hx = make_fabric(HyperXConfig(dims=(16, 16), terminals=8)).sim_topology()
+    # 256-switch HyperX saturation sweep, batched into one program.
+    hx = make_fabric(HyperXConfig(dims=(16, 16), terminals=8))
     hx_cycles = 300 if q else 600
     hx_loads = [0.5] if q else [0.3, 0.6]
 
-    def hx_tf(load):
+    def hx_tf(load, seed):
         return sim.uniform(256, offered=load, cycles=hx_cycles, terminals=8,
-                           seed=24)
+                           seed=seed)
 
-    us, stats = _timed(lambda: sim.saturation_sweep(
-        hx, sim.MinimalPolicy, hx_tf, hx_loads, terminals=8,
-        cycles=hx_cycles, warmup=hx_cycles // 4, seed=24))
+    us, grid = _timed(lambda: hx.sim_sweep(
+        "minimal", hx_tf, hx_loads, seeds=(24,), terminals=8,
+        cycles=hx_cycles, warmup=hx_cycles // 4))
+    stats = [ss[0] for ss in grid]
     all_stats.extend(stats)
     acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
     out.append(row("sim/hyperx256/uniform/minimal", us,
@@ -147,13 +217,38 @@ def sim_rows():
                                         terminals=2, seed=25)
         us, stats = _timed(lambda: sim.simulate(
             dtopo, sim.make_policy(pol), tr, terminals=2, cycles=d_cycles,
-            warmup=d_cycles // 4, seed=25))
+            warmup=d_cycles // 4, seed=25, backend="jax"))
         all_stats.append(stats)
         out.append(row(f"sim/dragonfly/adversarial/{pol}", us,
                        f"accepted={stats.accepted:.3f} "
                        f"lat_mean={stats.latency_mean:.1f}"))
 
-    sim.save_json(all_stats, _ARTIFACT, extra={"quick": q})
+    # 72-switch Dragonfly (a=6, h=2, g=12) — the sweep size the
+    # interpreted engine made impractical to iterate on.
+    d72 = make_fabric(DragonflyConfig(group_size=6, terminals_per_switch=3,
+                                      global_ports_per_switch=2,
+                                      num_groups=12))
+    d72_cycles = 300 if q else 800
+    d72_loads = [0.2, 0.4] if q else [0.1, 0.2, 0.3, 0.4]
+
+    def d72_tf(load, seed):
+        return sim.uniform(72, offered=load, cycles=d72_cycles, terminals=3,
+                           seed=seed)
+
+    for pol in ("minimal", "valiant"):
+        us, grid = _timed(lambda: d72.sim_sweep(
+            pol, d72_tf, d72_loads, seeds=(26, 27), terminals=3,
+            cycles=d72_cycles, warmup=d72_cycles // 4))
+        stats = [s for ss in grid for s in ss]
+        all_stats.extend(stats)
+        acc = " ".join(f"{ss[0].offered:.2f}:"
+                       f"{sum(s.accepted for s in ss) / len(ss):.3f}"
+                       for ss in grid)
+        out.append(row(f"sim/dragonfly72/uniform/{pol}", us,
+                       f"accepted[{acc}] ({len(stats)} runs, one program)"))
+
+    sim.save_json(all_stats, _ARTIFACT,
+                  extra={"quick": q, "sim_speed": sim_speed})
     return out
 
 

@@ -4,13 +4,19 @@ Sweeps the packet-level simulator over a topology and prints one table
 per traffic pattern, comparing routing policies — the experiment shape
 behind the paper's §3 minimal-vs-non-minimal discussion.
 
+By default the sweep runs on the compiled JAX engine
+(:mod:`repro.sim.xengine`): every (load, seed) point batches into one
+jit-compiled program.  ``--backend numpy`` uses the interpreted oracle
+engine instead (one Python iteration per simulated cycle).
+
 Usage (from the repo root):
 
     PYTHONPATH=src python examples/saturation_sweep.py
     PYTHONPATH=src python examples/saturation_sweep.py --topo hyperx --dims 8,8
     PYTHONPATH=src python examples/saturation_sweep.py --topo dragonfly \
         --traffic adversarial --policies minimal,valiant
-    PYTHONPATH=src python examples/saturation_sweep.py --json sweep.json
+    PYTHONPATH=src python examples/saturation_sweep.py --seeds 0,1,2 --json sweep.json
+    PYTHONPATH=src python examples/saturation_sweep.py --backend numpy
 """
 from __future__ import annotations
 
@@ -41,23 +47,24 @@ def build_topology(args):
 def traffic_factory(args, topo, pattern):
     n = topo.num_switches
     if pattern == "uniform":
-        return lambda load: sim.uniform(n, offered=load, cycles=args.cycles,
-                                        terminals=args.terminals, seed=args.seed)
+        return lambda load, seed: sim.uniform(
+            n, offered=load, cycles=args.cycles, terminals=args.terminals,
+            seed=seed)
     if pattern == "hotspot":
-        return lambda load: sim.hotspot(n, offered=load, cycles=args.cycles,
-                                        terminals=args.terminals,
-                                        hot_fraction=0.9, seed=args.seed)
+        return lambda load, seed: sim.hotspot(
+            n, offered=load, cycles=args.cycles, terminals=args.terminals,
+            hot_fraction=0.9, seed=seed)
     if pattern == "permutation":
-        return lambda load: sim.permutation(n, offered=load, cycles=args.cycles,
-                                            terminals=args.terminals,
-                                            seed=args.seed)
+        return lambda load, seed: sim.permutation(
+            n, offered=load, cycles=args.cycles, terminals=args.terminals,
+            seed=seed)
     if pattern == "adversarial":
         cfg = topo.meta.get("config")
         if not isinstance(cfg, DragonflyConfig):
             raise SystemExit("adversarial traffic needs --topo dragonfly")
-        return lambda load: sim.adversarial_same_group(
+        return lambda load, seed: sim.adversarial_same_group(
             cfg, offered=load, cycles=args.cycles, terminals=args.terminals,
-            seed=args.seed)
+            seed=seed)
     raise SystemExit(f"unknown traffic pattern {pattern!r}")
 
 
@@ -76,16 +83,21 @@ def main(argv=None):
                     help="comma list: uniform,hotspot,permutation,adversarial")
     ap.add_argument("--loads", default="0.1,0.3,0.5,0.7,0.9")
     ap.add_argument("--cycles", type=int, default=1000)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", default="0",
+                    help="comma list; the jax backend batches all seeds "
+                         "with all loads into one compiled program")
+    ap.add_argument("--backend", default="jax", choices=["jax", "numpy"],
+                    help="jax = compiled batched engine, numpy = oracle")
     ap.add_argument("--json", default=None, help="write records to this path")
     args = ap.parse_args(argv)
 
     topo = build_topology(args)
     loads = [float(x) for x in args.loads.split(",")]
+    seeds = tuple(int(s) for s in args.seeds.split(","))
     policies = args.policies.split(",")
     print(f"topology: {topo.name}  switches={topo.num_switches} "
           f"ports={topo.num_ports} links={topo.num_links} "
-          f"terminals={args.terminals}")
+          f"terminals={args.terminals} backend={args.backend}")
 
     everything = []
     for pattern in args.traffic.split(","):
@@ -93,13 +105,22 @@ def main(argv=None):
         t0 = time.time()
         stats = []
         for pol in policies:
-            stats += sim.saturation_sweep(
-                topo, lambda p=pol: sim.make_policy(p), tf, loads,
-                terminals=args.terminals, cycles=args.cycles,
-                warmup=args.cycles // 4, seed=args.seed)
+            if args.backend == "jax":
+                grid = sim.sim_sweep(
+                    topo, pol, tf, loads, seeds=seeds,
+                    terminals=args.terminals, cycles=args.cycles,
+                    warmup=args.cycles // 4)
+                stats += [s for per_load in grid for s in per_load]
+            else:
+                for seed in seeds:
+                    stats += sim.saturation_sweep(
+                        topo, lambda p=pol: sim.make_policy(p),
+                        lambda load, s=seed: tf(load, s), loads,
+                        terminals=args.terminals, cycles=args.cycles,
+                        warmup=args.cycles // 4, seed=seed)
         everything += stats
         print(f"\n== {pattern} traffic "
-              f"({len(policies) * len(loads)} runs, "
+              f"({len(policies) * len(loads) * len(seeds)} runs, "
               f"{time.time() - t0:.1f}s) ==")
         print(sim.format_table(stats))
         for pol in policies:

@@ -71,6 +71,44 @@ class Fabric(abc.ABC):
     def _build_sim_topology(self):
         """Construct the SimTopology (uncached)."""
 
+    def sim_sweep(self, policy, traffic_factory, loads, *,
+                  seeds=(0,), backend: str = "jax", terminals: int = 1,
+                  cycles: int | None = None, warmup: int | None = None,
+                  **sim_kw):
+        """Packet-level saturation sweep of this fabric.
+
+        ``policy`` is a policy name (``"minimal"``/``"valiant"``/
+        ``"adaptive"``), a :class:`~repro.sim.policies.RoutingPolicy`, or
+        a zero-arg factory; ``traffic_factory`` maps an offered load (or
+        ``(load, seed)``) to a :class:`~repro.sim.traffic.Traffic`.
+        Returns a ``[load][seed]`` grid of RunStats.
+
+        ``backend="jax"`` (default) compiles the whole (load, seed) grid
+        into one batched program (:mod:`repro.sim.xengine`);
+        ``backend="numpy"`` loops the oracle engine over the grid — same
+        statistics, one interpreted run per point.
+        """
+        from repro.sim import xengine
+        from repro.sim.report import saturation_sweep
+        topo = self.sim_topology()
+        if backend == "jax":
+            return xengine.sweep(topo, policy, traffic_factory, loads,
+                                 seeds=seeds, terminals=terminals,
+                                 cycles=cycles, warmup=warmup, **sim_kw)
+        # numpy: one interpreted saturation_sweep per seed, transposed to
+        # the same [load][seed] grid the compiled path returns.
+        seeded = xengine._accepts_seed(traffic_factory)
+        per_seed_sweeps = [
+            saturation_sweep(
+                topo, lambda: xengine._resolve_policy(policy),
+                (lambda load, s=seed: traffic_factory(load, s)) if seeded
+                else traffic_factory,
+                loads, terminals=terminals, cycles=cycles, warmup=warmup,
+                seed=seed, backend=backend, **sim_kw)
+            for seed in seeds]
+        return [[sweep_[li] for sweep_ in per_seed_sweeps]
+                for li in range(len(loads))]
+
     @abc.abstractmethod
     def link_loads(self, traffic="uniform") -> dict:
         """Closed-form link loads under ``traffic`` (default uniform a2a)."""

@@ -29,3 +29,5 @@ from .engine import Engine, simulate
 from .metrics import RunStats, latency_summary
 from .report import (compare_policies, format_table, saturation_point,
                      saturation_sweep, save_json, to_record)
+from . import xengine
+from .xengine import simulate_jax, sweep as sim_sweep

@@ -61,7 +61,7 @@ class Engine:
         self.rng = np.random.default_rng(seed)
 
         n, p, v = topo.num_switches, topo.num_ports, self.num_vcs
-        self.links = LinkTable(topo, v)
+        self.links = LinkTable.for_topology(topo, v)
         self.load = LinkLoadCounter(self.links)
         self.fabric = QueueFabric(n * p * v, queue_capacity)
 
@@ -109,11 +109,8 @@ class Engine:
         port — the credit-visible congestion signal."""
         link = self.links.link_ids(switch, port)
         base = self.links.dest_queue(link, np.zeros_like(link))
-        occ = self.fabric.occ
-        total = np.zeros(link.shape, dtype=np.int64)
-        for v in range(self.num_vcs):
-            total += occ[base + v]
-        return total
+        per_port = self.fabric.occ.reshape(-1, self.num_vcs).sum(axis=1)
+        return per_port[base // self.num_vcs]
 
     def link_pressure(self, switch: np.ndarray, port: np.ndarray) -> np.ndarray:
         """Smoothed requested demand (packets/cycle) on an output link."""
@@ -169,20 +166,23 @@ class Engine:
         i_vc = np.zeros(ip.size, dtype=np.int64)     # first hop = class 0
 
         # 4. link arbitration with credit check ---------------------------
+        # The EWMA pressure update happens exactly once per cycle, on every
+        # path out of this stage (an empty request set is demand == 0, a
+        # fully-blocked cycle still counts its requesters), so adaptive
+        # policies never read a stale congestion signal.
         nt = tp.size
         r_pid = np.concatenate([tp, ip])
-        if r_pid.size == 0:
-            self.pressure -= self.pressure_alpha * self.pressure
-            self.cycle += 1
-            return
         r_loc = np.concatenate([self.loc[tp], self.src[ip]])
         r_port = np.concatenate([t_port, i_port])
-        r_vc = np.concatenate([t_vc, i_vc])
-        r_cls = np.concatenate([np.zeros(nt, np.int64),
-                                np.ones(ip.size, np.int64)])
         r_link = links.link_ids(r_loc, r_port)
         demand = np.bincount(r_link, minlength=links.num_link_slots)
         self.pressure += self.pressure_alpha * (demand - self.pressure)
+        if r_pid.size == 0:
+            self.cycle += 1
+            return
+        r_vc = np.concatenate([t_vc, i_vc])
+        r_cls = np.concatenate([np.zeros(nt, np.int64),
+                                np.ones(ip.size, np.int64)])
         r_dq = links.dest_queue(r_link, r_vc)
         feasible = np.nonzero(fab.occ[r_dq] < cap)[0]
         if feasible.size == 0:
@@ -248,8 +248,27 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
              num_vcs: int | None = None, queue_capacity: int = 4,
              cycles: int | None = None,
              warmup: int = 0, drain: bool | None = None,
-             max_cycles: int | None = None, seed: int = 0) -> RunStats:
-    """Convenience wrapper: build an :class:`Engine` and run it."""
+             max_cycles: int | None = None, seed: int = 0,
+             backend: str = "numpy") -> RunStats:
+    """Run one simulation; ``backend`` picks the engine.
+
+    * ``"numpy"`` — the interpreted oracle :class:`Engine` (one Python
+      iteration per cycle; reference semantics).
+    * ``"jax"``   — the compiled engine (:mod:`repro.sim.xengine`): same
+      pipeline as a jit-compiled fixed-shape program.  Statistically
+      equivalent, not bit-identical (arbitration tie-breaks draw from a
+      different RNG).  Prefer :func:`repro.sim.xengine.sweep` when running
+      many (load, seed) points — it batches them into one program.
+    """
+    if backend == "jax":
+        from . import xengine
+        return xengine.simulate_jax(
+            topo, policy, traffic, terminals=terminals, eject_bw=eject_bw,
+            num_vcs=num_vcs, queue_capacity=queue_capacity, cycles=cycles,
+            warmup=warmup, drain=drain, max_cycles=max_cycles, seed=seed)
+    if backend != "numpy":
+        raise ValueError(f"unknown simulator backend {backend!r}; "
+                         f"expected 'numpy' or 'jax'")
     eng = Engine(topo, policy, traffic, terminals=terminals,
                  eject_bw=eject_bw, num_vcs=num_vcs,
                  queue_capacity=queue_capacity, seed=seed)

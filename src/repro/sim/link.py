@@ -18,6 +18,21 @@ from .topology import SimTopology
 
 
 class LinkTable:
+    @classmethod
+    def for_topology(cls, topo: SimTopology, num_vcs: int) -> "LinkTable":
+        """Memoized constructor: one table per (topology, num_vcs).
+
+        A saturation sweep builds a fresh :class:`~repro.sim.engine.Engine`
+        per (load, seed) point over the *same* topology; the table is pure
+        read-only topology data, so every point can share one instance
+        instead of re-flattening the neighbour matrices each time.
+        """
+        cache = topo.__dict__.setdefault("_link_tables", {})
+        table = cache.get(num_vcs)
+        if table is None:
+            table = cache[num_vcs] = cls(topo, num_vcs)
+        return table
+
     def __init__(self, topo: SimTopology, num_vcs: int):
         self.topo = topo
         self.num_vcs = num_vcs

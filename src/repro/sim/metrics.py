@@ -55,10 +55,11 @@ def latency_summary(lat: np.ndarray) -> dict:
         return {"mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0,
                 "histogram": np.zeros(1, dtype=np.int64)}
     hist = np.bincount(np.minimum(lat, HIST_MAX_LATENCY))
+    p50, p99 = np.percentile(lat, [50, 99])
     return {
         "mean": float(lat.mean()),
-        "p50": float(np.percentile(lat, 50)),
-        "p99": float(np.percentile(lat, 99)),
+        "p50": float(p50),
+        "p99": float(p99),
         "max": int(lat.max()),
         "histogram": hist,
     }

@@ -22,8 +22,22 @@ def saturation_sweep(topo: SimTopology,
                      traffic_factory: Callable[[float], Traffic],
                      loads: Sequence[float], *, terminals: int = 1,
                      cycles: int | None = None, warmup: int | None = None,
-                     seed: int = 0, **sim_kw) -> list[RunStats]:
-    """One run per offered load; a fresh policy and traffic object each."""
+                     seed: int = 0, backend: str = "numpy",
+                     **sim_kw) -> list[RunStats]:
+    """One run per offered load; a fresh policy and traffic object each.
+
+    ``backend="jax"`` compiles the whole sweep into one batched program
+    (:func:`repro.sim.xengine.sweep`) instead of looping runs in Python;
+    pass ``cycles=`` explicitly in that case so every point shares one
+    horizon.  For multi-seed grids use :func:`repro.sim.xengine.sweep`
+    (or ``Fabric.sim_sweep``) directly.
+    """
+    if backend == "jax":
+        from .xengine import sweep as xsweep
+        grid = xsweep(topo, policy_factory, traffic_factory, loads,
+                      seeds=(seed,), terminals=terminals, cycles=cycles,
+                      warmup=warmup, **sim_kw)
+        return [per_load[0] for per_load in grid]
     out = []
     for load in loads:
         traffic = traffic_factory(load)
@@ -31,7 +45,7 @@ def saturation_sweep(topo: SimTopology,
         wu = warmup if warmup is not None else n_cycles // 4
         out.append(simulate(topo, policy_factory(), traffic,
                             terminals=terminals, cycles=n_cycles, warmup=wu,
-                            seed=seed, **sim_kw))
+                            seed=seed, backend=backend, **sim_kw))
     return out
 
 

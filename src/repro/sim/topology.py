@@ -57,6 +57,28 @@ class SimTopology:
         """Directed wired (switch, port) pairs / 2 = undirected links."""
         return int(np.sum(self.neighbor >= 0)) // 2
 
+    def minimal_port_table(self) -> np.ndarray:
+        """Dense ``(N, N)`` next-hop table: entry ``[cur, tgt]`` is the
+        output port ``minimal_port`` picks at ``cur`` towards ``tgt``.
+
+        The compiled engine (:mod:`repro.sim.xengine`) consumes routing as
+        a gather, so the table-free route is evaluated once here for every
+        ordered pair and cached on the topology.  The diagonal is unused
+        (a packet at its target ejects) and filled with 0.
+        """
+        tbl = self.__dict__.get("_minimal_port_table")
+        if tbl is None:
+            n = self.num_switches
+            cur = np.repeat(np.arange(n), n)
+            tgt = np.tile(np.arange(n), n)
+            off = cur != tgt
+            flat = np.zeros(n * n, dtype=np.int64)
+            flat[off] = np.asarray(self.minimal_port(cur[off], tgt[off]),
+                                   dtype=np.int64)
+            tbl = flat.reshape(n, n)
+            self.__dict__["_minimal_port_table"] = tbl
+        return tbl
+
     def validate(self) -> None:
         """Cheap structural sanity: links pair up (A's port i reaches B,
         and B's ``rev_port`` points back at A through the same wire)."""

@@ -1,0 +1,731 @@
+"""Compiled simulation engine: the cycle pipeline as one JAX program.
+
+The numpy :class:`~repro.sim.engine.Engine` is the semantic oracle: one
+Python iteration per simulated cycle, with dynamic-shape ``np.nonzero``
+gathers selecting the active queues and feasible requests.  That costs
+O(points x seeds x cycles) interpreter round-trips per saturation sweep —
+the hottest path in the repo.  This module re-expresses the same pipeline
+(eject -> route -> inject -> credit-checked link arbitration -> move) as a
+*fixed-shape, functionally pure* step over a state pytree, compiled with
+``jax.lax`` loops under ``jit``, so an entire sweep — every offered-load
+point x every seed — runs as a single compiled program.
+
+Masked-dense design
+-------------------
+Dynamic selections become dense lanes with validity masks, and — because
+XLA's scatter is a serial per-update loop on CPU — every per-cycle update
+except the delivery-timestamp record is formulated as a gather, select,
+or axis reduction:
+
+* **Queues.** Every (switch, input-port, VC) FIFO is a lane; ``occ > 0``
+  masks the active ones.  The packet attributes that evolve in flight
+  (itinerary ``mid``, routing ``phase``, ``hops``) ride *inside* the
+  ring buffers as one packed word per slot, pushed and popped with the
+  packet id; a packet's location is implicit in the queue holding it.
+* **Routing.** The table-free minimal route is evaluated once per
+  topology into a dense ``(N, N)`` next-port table
+  (:meth:`SimTopology.minimal_port_table`); in-step routing is a gather.
+* **Arbitration.** All contenders for a switch's output links — its
+  ``ports x VCs`` queue heads plus its ``terminals`` injection lanes —
+  form one dense block, and the oracle's lexsort-based
+  :func:`arbitrate` becomes an argmin over a (contender, port) key
+  tensor: transit-beats-injection rides in the key's class bit, random
+  tie-breaks in its low bits.  Ejection (k winners per switch) is a
+  pairwise rank inside the same block.
+* **Movement as gathers.** One winner per directed link means the
+  downstream queue of link (s, i) receives from exactly one place, so
+  pushes invert into a *gather* through the wire's feeder table
+  (``nbr[s,i]*P + rev[s,i]``), and ring-buffer writes are one-hot
+  selects over the ``capacity`` axis.  Link-load counters increment
+  elementwise (loads are link-indexed).  The only scatter left is the
+  per-ejection delivery-cycle record.
+* **Batching by fabric replication, not vmap.** A sweep's (load, seed)
+  grid is laid out as B disjoint copies of the topology inside one flat
+  state: queue lane ``b*Q + q``, link slot ``b*L + l``, packet id
+  ``b*M + p`` belong to grid point ``b``.  Every op above stays flat
+  and vectorized (a vmapped scatter is not), the loop predicate stays
+  scalar, and per-op dispatch overhead is amortized over the grid.
+* **Traffic.** Packet descriptors concatenate at exact sizes with
+  cumulative id offsets — the flat layout needs no per-point padding,
+  only that every point shares the compiled horizon.
+
+Equivalence is statistical, not bitwise: both engines simulate the same
+queueing system over the same packet sets, but arbitration tie-breaks
+draw from different RNG streams.  ``tests/test_xengine.py`` pins the
+invariants that *must* agree exactly (delivered packet counts under
+drain, minimal-route link loads) and bounds the rest (accepted
+throughput, latency) within seed-matched tolerances.
+"""
+from __future__ import annotations
+
+import inspect
+from functools import partial
+from typing import Callable, NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .engine import _DRAIN_SLACK
+from .link import LinkLoadCounter, LinkTable
+from .metrics import RunStats, build_stats
+from .policies import RoutingPolicy, make_policy
+from .topology import SimTopology
+from .traffic import Traffic
+
+_I32 = jnp.int32
+_INT32_MAX = np.iinfo(np.int32).max
+#: Sentinel generation cycle for padded packet slots: larger than any
+#: simulated cycle, so a padded slot never becomes an injection candidate.
+_PAD_GEN = _INT32_MAX
+#: Hop counts saturate at this value inside the packed attribute word
+#: (mid << 8 | phase << 7 | hops); hops only feed the VC-class clamp
+#: ``min(hops, num_vcs - 1)``, so saturation is lossless for V <= 128.
+_MAX_HOPS = 127
+
+
+#: Above this many (horizon x queue-lane) entries the per-cycle ejection
+#: log (see _step) falls back to a per-packet scatter to bound memory.
+_LOG_ENTRY_BUDGET = 48_000_000
+
+
+class XSpec(NamedTuple):
+    """Static (hashable) engine configuration — the jit cache key.
+
+    ``horizon``/``cutoff`` are static so the loop can be a fixed-trip
+    ``fori_loop`` and the ejection log can be allocated ``(horizon, Q)``;
+    sweeps with different cycle counts compile separately (sweeps share
+    one cycle count by construction, so this rarely recompiles).
+    """
+    n: int
+    ports: int
+    vcs: int
+    cap: int
+    terminals: int
+    eject_bw: int
+    policy: str
+    threshold: float
+    weight: float
+    alpha: float
+    drain: bool
+    horizon: int
+    cutoff: int
+    log_deliveries: bool
+
+
+class _Tables(NamedTuple):
+    """Constants of one compiled run: topology tables plus precomputed
+    index vectors (everything an iota/div/mod chain would otherwise
+    recompute inside the loop body every cycle).
+
+    Topology tables use *local* (per-copy) ids; index vectors span the
+    flat replicated state (Q = B*N*P*V lanes, L = B*N*P links,
+    NT = B*N*T terminal lanes).
+    """
+    port_table: jax.Array        # (N, N) next-hop output port
+    feeder_local: jax.Array      # (N*P,) local link feeding port (s,i); -1.
+    #                              Read both ways: the queue behind input
+    #                              port (s,i) receives from link
+    #                              feeder_local[s*p+i], and the downstream
+    #                              port of link (s,i) IS feeder_local[s*p+i]
+    #                              (inverse-wire identity).
+    sw_local: jax.Array          # (Q,) local switch of each queue lane
+    x_of_lane: jax.Array         # (Q,) contender slot within the block
+    vc_of_lane: jax.Array        # (Q,) VC of each queue lane
+    linkbase_of_lane: jax.Array  # (Q,) flat link id of the block's port 0
+    feeder_flat: jax.Array       # (Q,) flat link feeding the lane's port
+    feeder_xbase: jax.Array      # (Q,) feeder's block * x (contender base)
+    wired_q: jax.Array           # (Q,) lane's input port is wired
+    blk_idx: jax.Array           # (NT,) flat (copy, switch) index
+    slot_of_term: jax.Array      # (NT,) terminal slot within the switch
+    linkbase_of_term: jax.Array  # (NT,) flat link id of the switch's port 0
+    copybase_of_term: jax.Array  # (NT,) copy * N*P (adaptive congestion)
+    copybase_of_block: jax.Array  # (B*N,) copy * N*P per switch block
+    copy_of_link: jax.Array      # (L,) copy owning each flat link
+
+
+class _State(NamedTuple):
+    """Flat state of all B fabric copies: the loop carry.
+
+    Shapes use Q = B*N*P*V queue lanes, L = B*N*P link slots, and
+    M = B*pad packet slots.  Queue ring buffers interleave the packet id
+    and its packed attribute word along a trailing axis of 2, so head
+    reads and winner gathers move one (pid, attr) pair per row.
+
+    ``deliver`` and ``ej_log`` are the two delivery-record modes: with
+    ``spec.log_deliveries`` each cycle writes its ejected pids as one
+    contiguous ``(Q,)`` row of ``ej_log`` (a ``dynamic_update_slice`` —
+    cheap), and per-packet times are reconstructed on the host after the
+    run; otherwise ``deliver`` is scattered per ejection (XLA's CPU
+    scatter is a serial per-row loop, but drain-mode runs are small).
+    Exactly one of the two is non-trivial per compile.
+    """
+    buf: jax.Array               # (Q, cap, 2) ring buffers: pid, attr word
+    head: jax.Array              # (Q,)
+    occ: jax.Array               # (Q,)
+    deliver: jax.Array           # (M,) delivery cycle, -1 = in flight
+    ej_log: jax.Array            # (horizon, Q) ejected pid per lane, -1
+    term_next: jax.Array         # (B*N*T,) injected count per terminal lane
+    pressure: jax.Array          # (L,) EWMA requested link demand
+    load_total: jax.Array        # (L,) lifetime link traversals
+    load_window: jax.Array       # (L,) traversals inside [warmup, horizon)
+    delivered_total: jax.Array   # (B,)
+    delivered_win: jax.Array     # (B,)
+    cycle: jax.Array             # scalar, shared by every copy
+
+
+def _pack_attr(mid, phase, hops):
+    return (mid << 8) | (phase << 7) | jnp.minimum(hops, _MAX_HOPS)
+
+
+def _resolve_policy(policy) -> RoutingPolicy:
+    if isinstance(policy, RoutingPolicy):
+        return policy
+    if isinstance(policy, str):
+        return make_policy(policy)
+    if callable(policy):
+        return policy()
+    raise TypeError(f"cannot resolve a routing policy from {policy!r}")
+
+
+def _accepts_seed(traffic_factory: Callable) -> bool:
+    """True when the factory takes ``(load, seed)`` rather than ``(load)``."""
+    try:
+        pos = [q for q in
+               inspect.signature(traffic_factory).parameters.values()
+               if q.kind in (q.POSITIONAL_ONLY, q.POSITIONAL_OR_KEYWORD,
+                             q.VAR_POSITIONAL)]
+        return len(pos) >= 2
+    except (TypeError, ValueError):
+        return False
+
+
+def _pack_traffic(traffic: Traffic, n: int, pid_base: int
+                  ) -> dict[str, np.ndarray]:
+    """The oracle Engine's packet layout — sorted by (src, gen), with
+    per-switch source-FIFO block bounds — offset into the flat packet-id
+    space at ``pid_base``.  Grid points keep their exact sizes (no
+    padding); the flat layout only needs cumulative offsets."""
+    src = traffic.src.astype(np.int64)
+    gen = traffic.gen.astype(np.int64)
+    # All in-repo generators emit (src, gen)-sorted packets already; the
+    # stable lexsort is then the identity, so skip it (it is one of the
+    # priciest host-side steps of a batched sweep).
+    key = src * (gen.max(initial=0) + 1) + gen
+    if np.all(key[1:] >= key[:-1]):
+        dst = traffic.dst
+    else:
+        order = np.lexsort((traffic.gen, traffic.src))
+        src = src[order]
+        gen = gen[order]
+        dst = traffic.dst[order]
+    m = src.size
+    counts = np.bincount(src, minlength=n) if m else np.zeros(n, np.int64)
+    blk_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    blk_end = blk_start + counts
+    return {
+        "src": src.astype(np.int32),
+        "dst": np.asarray(dst, dtype=np.int32),
+        "gen": np.clip(gen, 0, _PAD_GEN).astype(np.int32),
+        "blk_start": (blk_start + pid_base).astype(np.int32),
+        "blk_end": (blk_end + pid_base).astype(np.int32),
+        "m_real": np.int32(m),
+    }
+
+
+# ---------------------------------------------------------------------------
+# The compiled cycle step (all B fabric copies at once).
+# ---------------------------------------------------------------------------
+
+def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
+          warmup: jax.Array, state: _State) -> _State:
+    n, p, v = spec.n, spec.ports, spec.vcs
+    cap, t = spec.cap, spec.terminals
+    pv = p * v
+    blocks = state.head.shape[0] // pv          # B * N switch blocks
+    b = blocks // n                             # fabric copies in the batch
+    q_flat = blocks * pv
+    nt_flat = b * n * t
+    n_links = blocks * p
+    m_flat = pkt["src"].shape[0]
+    x = pv + t                                  # contenders per switch block
+    # Packed arbitration key: [cls | rand | contender index], low bits the
+    # index so one min-reduction yields both the winning key and who won.
+    # Index bits cover x strictly (2^x_bits > x), so the sentinel's index
+    # field can never alias a real contender.  Small blocks fit the key
+    # in int16 (halving the hot tensor); the random field keeps >= 8 bits
+    # either way, so tie-break bias stays negligible.
+    x_bits = int(x).bit_length()
+    x_mask = (1 << x_bits) - 1
+    if x_bits <= 6:
+        key_dtype, sent, rand_bits = jnp.int16, 32767, 14 - x_bits
+    else:
+        key_dtype, sent = _I32, _INT32_MAX
+        rand_bits = min(30 - x_bits, 16)
+    src, dst, gen = pkt["src"], pkt["dst"], pkt["gen"]
+    c = state.cycle
+    in_window = (c >= warmup) & (c < spec.horizon)   # (B,) per-copy mask
+    # One random word per queue lane and per terminal lane; mechanisms
+    # consume disjoint bit ranges of a word (threefry bits are
+    # independent), halving the per-cycle threefry work.
+    bits = jax.random.bits(jax.random.fold_in(base_key, c),
+                           (q_flat + nt_flat,))
+    lane_bits = bits[:q_flat]          # high 16: ejection; low 16: arb
+    term_bits = bits[q_flat:]          # high bits: arb; low: Valiant mid
+
+    # -- queue heads --------------------------------------------------------
+    lanes = jnp.arange(q_flat, dtype=_I32)
+    valid = state.occ > 0
+    head_slot = state.head % cap
+    h_pair = state.buf[lanes, head_slot]        # (Q, 2): pid, attr
+    pid = jnp.where(valid, h_pair[:, 0], 0)
+    h_attr = h_pair[:, 1]
+    h_mid = h_attr >> 8
+    h_phase = (h_attr >> 7) & 1
+    h_hops = h_attr & _MAX_HOPS
+    done = valid & (tables.sw_local == dst[pid]) & (h_phase == 1)
+
+    # 1. ejection: up to eject_bw random winners per switch ----------------
+    # Winners are the eject_bw smallest unique (randbits, lane) keys among
+    # the done heads of each switch's (ports * VCs) lane block.  Small
+    # blocks use a pairwise rank (fewest dispatches); large blocks a
+    # sorted k-th-key threshold (O(pv log pv) beats O(pv^2)).  Both pick
+    # the same winners.
+    done2 = done.reshape(blocks, pv)
+    if spec.eject_bw <= 0:
+        # A stalled ejection port: nothing leaves (matches the oracle's
+        # arbitrate(..., k=0)); without this guard the sort-threshold
+        # branch below would index the k-th key at -1 and eject everything.
+        ej_win = jnp.zeros(q_flat, bool)
+    elif pv <= 32:
+        r2 = (lane_bits >> np.uint32(16)).astype(jnp.uint16
+                                                 ).reshape(blocks, pv)
+        idx = jnp.arange(pv)
+        before = (r2[:, None, :] < r2[:, :, None]) | (
+            (r2[:, None, :] == r2[:, :, None])
+            & (idx[None, :] < idx[:, None]))
+        rank = jnp.sum(before & done2[:, None, :], axis=2)
+        ej_win = (done2 & (rank < spec.eject_bw)).reshape(q_flat)
+    else:
+        e_bits = int(pv).bit_length()
+        ekey = (((lane_bits >> np.uint32(16)).astype(_I32)
+                 << e_bits) | tables.x_of_lane)
+        ekey = jnp.where(done, ekey, _INT32_MAX)
+        kth = jnp.sort(ekey.reshape(blocks, pv), axis=1)[
+            :, min(spec.eject_bw, pv) - 1]
+        ej_win = done & (ekey <= jnp.repeat(kth, pv))
+
+    ej_cnt = ej_win.reshape(b, n * pv).sum(axis=1, dtype=_I32)
+    if spec.log_deliveries:
+        # One contiguous row write per cycle; per-packet times are
+        # reconstructed on the host.  Orders of magnitude cheaper than a
+        # per-row scatter on XLA:CPU.
+        deliver = state.deliver
+        ej_log = lax.dynamic_update_slice(
+            state.ej_log, jnp.where(ej_win, pid, -1)[None, :], (c, 0))
+    else:
+        deliver = state.deliver.at[
+            jnp.where(ej_win, pid, m_flat)].set(c, mode="drop")
+        ej_log = state.ej_log
+    occ = state.occ - ej_win.astype(_I32)
+    head = state.head + ej_win.astype(_I32)
+    delivered_total = state.delivered_total + ej_cnt
+    delivered_win = state.delivered_win + jnp.where(in_window, ej_cnt, 0)
+
+    # 2. transit requests --------------------------------------------------
+    transit = valid & ~done
+    sw_q = tables.sw_local
+    tgt = jnp.where(h_phase == 1, dst[pid], h_mid)
+    safe_tgt = jnp.where(transit & (tgt != sw_q), tgt, (sw_q + 1) % n)
+    t_port = tables.port_table[sw_q, safe_tgt]
+
+    # 3. injection candidates + policy itinerary ---------------------------
+    cand = (pkt["blk_start"][tables.blk_idx] + tables.slot_of_term
+            + state.term_next * t)
+    inj_valid = cand < pkt["blk_end"][tables.blk_idx]
+    ip = jnp.where(inj_valid, cand, 0)
+    inj_valid &= gen[ip] <= c
+
+    i_mid, i_phase = dst[ip], jnp.ones(nt_flat, _I32)
+    if spec.policy != "minimal" and n >= 3:
+        # Uniform intermediate avoiding {src, dst} (shift-remap).
+        s_i, d_i = src[ip], dst[ip]
+        lo = jnp.minimum(s_i, d_i)
+        hi = jnp.maximum(s_i, d_i)
+        r = ((term_bits & np.uint32(0x3FFF)) % np.uint32(n - 2)
+             ).astype(_I32)
+        r = r + (r >= lo)
+        r = r + (r >= hi)
+        if spec.policy == "valiant":
+            i_mid, i_phase = r, jnp.zeros(nt_flat, _I32)
+        else:  # adaptive: congestion-threshold detour (UGAL-style)
+            per_port_occ = occ.reshape(n_links, v).sum(axis=1)
+            base = tables.copybase_of_term
+
+            def congestion(port_local):
+                link_local = s_i * p + port_local
+                backlog = per_port_occ[
+                    base + tables.feeder_local[link_local]]
+                return state.pressure[base + link_local] + backlog
+
+            safe_d = jnp.where(d_i != s_i, d_i, (s_i + 1) % n)
+            c_min = congestion(tables.port_table[s_i, safe_d])
+            c_val = congestion(tables.port_table[s_i, r])
+            detour = c_min > spec.weight * c_val + spec.threshold
+            i_mid = jnp.where(detour, r, d_i)
+            i_phase = jnp.where(detour, 0, 1).astype(_I32)
+
+    i_tgt = jnp.where(i_phase == 1, dst[ip], i_mid)
+    i_src = src[ip]
+    i_tgt = jnp.where(i_tgt != i_src, i_tgt, (i_src + 1) % n)
+    i_port = tables.port_table[i_src, i_tgt]
+
+    # 4. link arbitration with credit check --------------------------------
+    # Contender block per switch: its pv queue heads then its t terminals.
+    # The attribute word carries (mid, phase, hops-after-this-hop), so the
+    # requested VC class is derived from it: min(hops - 1, V-1).
+    act = jnp.concatenate([transit.reshape(blocks, pv),
+                           inj_valid.reshape(blocks, t)], axis=1)
+    port_x = jnp.concatenate([t_port.reshape(blocks, pv),
+                              i_port.reshape(blocks, t)], axis=1)
+    pid_x = jnp.concatenate([pid.reshape(blocks, pv),
+                             ip.reshape(blocks, t)], axis=1)
+    attr_x = jnp.concatenate([
+        _pack_attr(h_mid, h_phase, h_hops + 1).reshape(blocks, pv),
+        _pack_attr(i_mid, i_phase, jnp.ones(nt_flat, _I32)
+                   ).reshape(blocks, t)], axis=1)
+    vc_x = jnp.minimum((attr_x & _MAX_HOPS) - 1, v - 1)
+
+    # Credit check against the downstream (port, VC) queue of each
+    # contender's requested link.  The downstream (switch, input-port) of
+    # link (s, i) is ``feeder_local[s*p + i]`` — the same inverse-wire
+    # table that routes pushes, read in the other direction.
+    link_local_x = jnp.concatenate(
+        [(sw_q * p + t_port).reshape(blocks, pv),
+         (i_src * p + i_port).reshape(blocks, t)], axis=1)
+    dq = ((tables.copybase_of_block[:, None]
+           + tables.feeder_local[link_local_x]) * v + vc_x)
+    feas = act & (occ[dq] < cap)
+
+    # Arbitration randomness: transit lanes use the low half of their
+    # lane word (the high half fed ejection); terminal lanes use the top
+    # of their word (the bottom 14 bits fed the Valiant-mid sample).
+    rand = jnp.concatenate(
+        [((lane_bits & np.uint32(0xFFFF))
+          >> np.uint32(16 - rand_bits)).astype(_I32).reshape(blocks, pv),
+         (term_bits >> np.uint32(32 - rand_bits)).astype(_I32
+                                                         ).reshape(blocks, t)],
+        axis=1)
+    cls = (jnp.arange(x, dtype=_I32) >= pv).astype(_I32)[None, :]
+    packed = ((((cls << rand_bits) | rand) << x_bits) | jnp.arange(
+        x, dtype=_I32)[None, :]).astype(key_dtype)
+    # (blocks, x, p) one-hot expansion; one min-reduction per port gives
+    # the winning key and the winner's contender index in its low bits.
+    key_m = jnp.where(
+        feas[:, :, None] & (port_x[:, :, None] == jnp.arange(p)),
+        packed[:, :, None], key_dtype(sent))
+    minval_flat = jnp.min(key_m, axis=1).reshape(n_links).astype(_I32)
+
+    if spec.policy == "adaptive":
+        # EWMA of requested (pre-credit) demand — only adaptive reads it.
+        req = act[:, :, None] & (port_x[:, :, None] == jnp.arange(p))
+        demand = jnp.sum(req, axis=1).reshape(n_links)
+        pressure = (state.pressure
+                    + spec.alpha * (demand - state.pressure))
+    else:
+        pressure = state.pressure
+
+    # 5. movement ----------------------------------------------------------
+    # Transit pop: queue lane q wins iff the winner of its requested link
+    # is contender q itself (sentinel's index field cannot match).
+    win_t = transit & ((minval_flat[tables.linkbase_of_lane + t_port]
+                        & x_mask) == tables.x_of_lane)
+    occ = occ - win_t.astype(_I32)
+    head = head + win_t.astype(_I32)
+
+    # Injection advance: terminal lane wins iff the winner of its link is
+    # contender pv + (lane's slot within the switch).
+    i_win = inj_valid & ((minval_flat[tables.linkbase_of_term + i_port]
+                          & x_mask) == pv + tables.slot_of_term)
+    term_next = state.term_next + i_win.astype(_I32)
+
+    # Push as a gather: queue (sw', p', vc') receives the winner of its
+    # feeder link (the wire into input port p') when the VC matches.
+    mv = minval_flat[tables.feeder_flat]
+    recv_x = tables.feeder_xbase + (mv & x_mask)
+    pair_x = jnp.stack([pid_x, attr_x], axis=-1).reshape(blocks * x, 2)
+    pair_w = pair_x[recv_x]                     # (Q, 2): pid, attr
+    pid_w, attr_w = pair_w[:, 0], pair_w[:, 1]
+    vc_w = jnp.minimum((attr_w & _MAX_HOPS) - 1, v - 1)
+    recv = tables.wired_q & (mv != sent) & (vc_w == tables.vc_of_lane)
+    # Phase flips on arrival at the Valiant intermediate — which, seen
+    # from the receiving queue, is simply its own switch.
+    attr_w = jnp.where(((attr_w & (1 << 7)) == 0)
+                       & ((attr_w >> 8) == tables.sw_local),
+                       attr_w | (1 << 7), attr_w)
+
+    slot = (head + occ) % cap
+    onehot = (jnp.arange(cap, dtype=_I32)[None, :] == slot[:, None]
+              ) & recv[:, None]
+    buf = jnp.where(
+        onehot[:, :, None],
+        jnp.stack([pid_w, attr_w], axis=-1)[:, None, :], state.buf)
+    occ = occ + recv.astype(_I32)
+
+    has_w = minval_flat != sent
+    load_total = state.load_total + has_w.astype(_I32)
+    load_window = state.load_window + (
+        has_w & in_window[tables.copy_of_link]).astype(_I32)
+
+    return _State(buf=buf, head=head, occ=occ, deliver=deliver,
+                  ej_log=ej_log, term_next=term_next, pressure=pressure,
+                  load_total=load_total, load_window=load_window,
+                  delivered_total=delivered_total,
+                  delivered_win=delivered_win, cycle=c + 1)
+
+
+@partial(jax.jit, static_argnums=0)
+def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
+              warmup: jax.Array) -> dict:
+    n, p, v = spec.n, spec.ports, spec.vcs
+    b = pkt["blk_start"].shape[0] // n
+    bq = b * n * p * v
+    m_flat = pkt["src"].shape[0]
+    state = _State(
+        buf=jnp.full((bq, spec.cap, 2), -1, _I32),
+        head=jnp.zeros(bq, _I32),
+        occ=jnp.zeros(bq, _I32),
+        deliver=jnp.full(m_flat if not spec.log_deliveries else 1, -1, _I32),
+        ej_log=jnp.full((spec.horizon if spec.log_deliveries else 1, bq),
+                        -1, _I32),
+        term_next=jnp.zeros(b * n * spec.terminals, _I32),
+        pressure=jnp.zeros(b * n * p, jnp.float32),
+        load_total=jnp.zeros(b * n * p, _I32),
+        load_window=jnp.zeros(b * n * p, _I32),
+        delivered_total=jnp.zeros(b, _I32),
+        delivered_win=jnp.zeros(b, _I32),
+        cycle=jnp.zeros((), _I32),
+    )
+
+    def body(st: _State):
+        return _step(spec, tables, pkt, key, warmup, st)
+
+    if spec.drain:
+        total_m = jnp.sum(pkt["m_real"])
+
+        def cond(st: _State):
+            return (st.cycle < spec.horizon) | (
+                (jnp.sum(st.delivered_total) < total_m)
+                & (st.cycle < spec.cutoff))
+
+        final = lax.while_loop(cond, body, state)
+    else:
+        # Static trip count: unrolling folds several cycles into each XLA
+        # loop iteration, amortizing per-op dispatch overhead.
+        final = lax.fori_loop(0, spec.horizon, lambda _i, st: body(st),
+                              state, unroll=8)
+    return {
+        "deliver": final.deliver,
+        "ej_log": final.ej_log,
+        "load_total": final.load_total,
+        "load_window": final.load_window,
+        "delivered_total": final.delivered_total,
+        "delivered_in_window": final.delivered_win,
+        "cycle": final.cycle,
+        "in_flight": final.occ.reshape(b, n * p * v).sum(axis=1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Host-side API.
+# ---------------------------------------------------------------------------
+
+def _default_num_vcs(topo: SimTopology, policy: RoutingPolicy) -> int:
+    return topo.diameter * (2 if policy.vc_required > 1 else 1)
+
+
+def _build_tables(topo: SimTopology, links: LinkTable, b: int,
+                  terminals: int, num_vcs: int) -> _Tables:
+    """Topology tables + flat index vectors for ``b`` fabric copies."""
+    n, p, v, t = topo.num_switches, topo.num_ports, num_vcs, terminals
+    pv, x = p * v, p * v + terminals
+    nbr = links.neighbor_flat.astype(np.int64)
+    rev = links.rev_flat.astype(np.int64)
+    feeder_local = np.where(nbr >= 0, nbr * p + rev, -1)
+
+    lanes = np.arange(b * n * pv, dtype=np.int64)
+    copy_of_lane = lanes // (n * pv)
+    block_of_lane = lanes // pv
+    qport_local = (lanes % (n * pv)) // v
+    f_local = feeder_local[qport_local]
+    feeder_flat = np.clip(copy_of_lane * (n * p) + f_local, 0,
+                          b * n * p - 1)
+    ti = np.arange(b * n * t, dtype=np.int64)
+    term_block = ti // t
+    blk_idx = term_block                         # flat (copy, switch)
+    link_ids = np.arange(b * n * p, dtype=np.int64)
+    as_i32 = lambda a: jnp.asarray(a, _I32)  # noqa: E731
+    return _Tables(
+        port_table=as_i32(topo.minimal_port_table()),
+        feeder_local=as_i32(feeder_local),
+        sw_local=as_i32((lanes % (n * pv)) // pv),
+        x_of_lane=as_i32(lanes % pv),
+        vc_of_lane=as_i32(lanes % v),
+        linkbase_of_lane=as_i32(block_of_lane * p),
+        feeder_flat=as_i32(feeder_flat),
+        feeder_xbase=as_i32((feeder_flat // p) * x),
+        wired_q=jnp.asarray(f_local >= 0),
+        blk_idx=as_i32(blk_idx),
+        slot_of_term=as_i32(ti % t),
+        linkbase_of_term=as_i32(term_block * p),
+        copybase_of_term=as_i32((ti // (n * t)) * (n * p)),
+        copybase_of_block=as_i32((np.arange(b * n) // n) * (n * p)),
+        copy_of_link=as_i32(link_ids // (n * p)))
+
+
+def sweep(topo: SimTopology, policy, traffic_factory: Callable,
+          loads: Sequence[float], *, seeds: Sequence[int] = (0,),
+          terminals: int = 1, eject_bw: int | None = None,
+          num_vcs: int | None = None, queue_capacity: int = 4,
+          cycles: int | None = None, warmup: int | None = None,
+          drain: bool | None = None, max_cycles: int | None = None
+          ) -> list[list[RunStats]]:
+    """An entire saturation sweep as one compiled program.
+
+    Every (offered load, seed) point becomes one replicated fabric copy
+    inside a single jit-compiled run (see the module docstring), so the
+    whole grid costs one compile + one device program.  Returns a
+    ``[load][seed]`` grid of :class:`RunStats` built by the same metrics
+    pipeline as the oracle engine.
+
+    ``traffic_factory`` is called as ``factory(load, seed)`` when it
+    accepts two positional arguments, else ``factory(load)`` (the oracle
+    sweep's convention, reusing one packet set across seeds).  All grid
+    points share one simulated horizon (they are one program), and
+    per-point arbitration streams derive from a key over the full seed
+    tuple.
+    """
+    policy = _resolve_policy(policy)
+    seeded_factory = _accepts_seed(traffic_factory)
+    n = topo.num_switches
+    grid: list[tuple[float, int, Traffic]] = []
+    for load in loads:
+        for seed in seeds:
+            tr = (traffic_factory(load, seed) if seeded_factory
+                  else traffic_factory(load))
+            grid.append((load, seed, tr))
+    if not grid:
+        return []
+
+    if drain is None:
+        drain = all(tr.offered == 0 for _, _, tr in grid)
+    if num_vcs is None:
+        num_vcs = _default_num_vcs(topo, policy)
+    if num_vcs > _MAX_HOPS + 1:
+        raise ValueError(f"compiled engine packs hop counts into 7 bits; "
+                         f"num_vcs={num_vcs} is out of range")
+
+    sizes = [tr.num_packets for _, _, tr in grid]
+    bases = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    packed = [_pack_traffic(tr, n, int(bases[i]))
+              for i, (_, _, tr) in enumerate(grid)]
+    horizons, warmups = [], []
+    for _, _, tr in grid:
+        hor = cycles if cycles is not None else max(tr.horizon, 1)
+        horizons.append(hor)
+        warmups.append(hor // 4 if warmup is None else warmup)
+    if len(set(horizons)) != 1:
+        raise ValueError(
+            f"a batched sweep runs as one program and needs one cycle count "
+            f"shared by every (load, seed) point, got "
+            f"{sorted(set(horizons))}; pass cycles=...")
+    horizon = int(horizons[0])
+    cutoff = int(max_cycles if max_cycles is not None
+                 else horizon + _DRAIN_SLACK)
+    q_flat = len(grid) * n * topo.num_ports * num_vcs
+    log_deliveries = (not drain
+                      and horizon * q_flat <= _LOG_ENTRY_BUDGET)
+    spec = XSpec(
+        n=n, ports=topo.num_ports, vcs=num_vcs, cap=queue_capacity,
+        terminals=terminals,
+        eject_bw=terminals if eject_bw is None else eject_bw,
+        policy=policy.name,
+        threshold=float(getattr(policy, "threshold", 0.0)),
+        weight=float(getattr(policy, "weight", 0.0)),
+        alpha=0.05, drain=bool(drain), horizon=horizon, cutoff=cutoff,
+        log_deliveries=log_deliveries)
+
+    links = LinkTable.for_topology(topo, num_vcs)
+    tables = _build_tables(topo, links, len(grid), terminals, num_vcs)
+
+    flat_np = {k: (np.concatenate([pk[k] for pk in packed])
+                   if packed[0][k].ndim else
+                   np.asarray([pk[k] for pk in packed]))
+               for k in packed[0]}
+    if flat_np["src"].size == 0:
+        # Keep packet gathers in range for an all-empty grid: one inert
+        # slot whose generation time never becomes eligible.
+        flat_np["src"] = np.zeros(1, np.int32)
+        flat_np["dst"] = np.full(1, min(1, n - 1), np.int32)
+        flat_np["gen"] = np.full(1, _PAD_GEN, np.int32)
+    flat = {k: jnp.asarray(a) for k, a in flat_np.items()}
+    key = jax.random.PRNGKey(hash(tuple(s for _, s, _ in grid)) & 0x7FFFFFFF)
+    out = _run_flat(spec, tables, flat, key, jnp.asarray(warmups, _I32))
+    out = jax.tree_util.tree_map(np.asarray, out)
+
+    total_m = max(1, int(sum(sizes)))
+    if log_deliveries:
+        # Reconstruct per-packet delivery cycles from the per-cycle
+        # ejection log: row c holds the pids ejected at cycle c.
+        log = out["ej_log"].ravel()
+        q_per_cycle = out["ej_log"].shape[1]
+        deliver_all = np.full(total_m, -1, np.int64)
+        hit = np.flatnonzero(log >= 0)
+        deliver_all[log[hit]] = hit // q_per_cycle
+    else:
+        deliver_all = out["deliver"].astype(np.int64)
+
+    n_links = n * topo.num_ports
+    results: list[RunStats] = []
+    for i, (load, seed, tr) in enumerate(grid):
+        m = int(packed[i]["m_real"])
+        delivered_total = int(out["delivered_total"][i])
+        if drain and delivered_total < m:
+            raise RuntimeError(
+                f"{topo.name}/{policy.name}: {m - delivered_total} packets "
+                f"undelivered after {int(out['cycle'])} cycles "
+                f"(deadlock or cutoff too small)")
+        counter = LinkLoadCounter(links)
+        counter.total = out["load_total"][
+            i * n_links:(i + 1) * n_links].astype(np.int64)
+        counter.window = out["load_window"][
+            i * n_links:(i + 1) * n_links].astype(np.int64)
+        deliver = deliver_all[int(bases[i]):int(bases[i]) + m]
+        results.append(build_stats(
+            topology=topo, policy=policy, traffic=tr,
+            cycles=max(horizon, 1), warmup=int(warmups[i]),
+            terminals=terminals,
+            gen=packed[i]["gen"][:m].astype(np.int64),
+            deliver=deliver, link_counter=counter,
+            delivered_in_window=int(out["delivered_in_window"][i]),
+            in_flight=int(out["in_flight"][i])))
+    return [results[li * len(seeds):(li + 1) * len(seeds)]
+            for li in range(len(loads))]
+
+
+def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
+                 terminals: int = 1, eject_bw: int | None = None,
+                 num_vcs: int | None = None, queue_capacity: int = 4,
+                 cycles: int | None = None, warmup: int | None = None,
+                 drain: bool | None = None, max_cycles: int | None = None,
+                 seed: int = 0) -> RunStats:
+    """One compiled run (a single-copy :func:`sweep`)."""
+    if drain is None:
+        drain = traffic.offered == 0
+    return sweep(topo, policy, lambda _load: traffic, [traffic.offered],
+                 seeds=(seed,), terminals=terminals, eject_bw=eject_bw,
+                 num_vcs=num_vcs, queue_capacity=queue_capacity,
+                 cycles=cycles, warmup=0 if warmup is None else warmup,
+                 drain=drain, max_cycles=max_cycles)[0][0]

@@ -1,0 +1,271 @@
+"""Compiled engine (repro.sim.xengine) vs the numpy oracle.
+
+Two tiers of agreement:
+
+* **Exact** — properties arbitration order cannot change: delivered
+  packet counts of drained (closed) workloads, and per-link load totals
+  under minimal routing (the minimal path of every packet is unique, so
+  the drained traversal multiset is engine-independent).
+* **Statistical** — open-loop sweeps driven by the *same* traffic object
+  through both engines: accepted throughput, delivered counts, mean
+  latency, and the latency histogram mass agree within seed-matched
+  tolerances (the engines draw arbitration tie-breaks from different RNG
+  streams).
+"""
+import numpy as np
+import pytest
+
+import repro.fabric.mirror  # noqa: F401  (registers the mirror instance)
+from repro import sim
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.core.simulate import cin_link_loads
+from repro.fabric import make_fabric
+from repro.sim import xengine
+
+CYCLES = 240
+WARMUP = 60
+T = 6
+
+
+def _both(topo, policy_name, traffic, *, terminals=T, cycles=CYCLES,
+          warmup=WARMUP, seed=3, **kw):
+    """Run one traffic object through both engines."""
+    s_np = sim.simulate(topo, sim.make_policy(policy_name), traffic,
+                        terminals=terminals, cycles=cycles, warmup=warmup,
+                        seed=seed, backend="numpy", **kw)
+    s_jx = sim.simulate(topo, sim.make_policy(policy_name), traffic,
+                        terminals=terminals, cycles=cycles, warmup=warmup,
+                        seed=seed, backend="jax", **kw)
+    return s_np, s_jx
+
+
+def _assert_statistical_match(s_np, s_jx, rtol=0.12):
+    assert s_jx.packets_generated == s_np.packets_generated
+    assert s_jx.packets_delivered == pytest.approx(
+        s_np.packets_delivered, rel=rtol, abs=25)
+    assert s_jx.accepted == pytest.approx(s_np.accepted, rel=rtol, abs=0.02)
+    if s_np.latency_mean > 0:
+        assert s_jx.latency_mean == pytest.approx(
+            s_np.latency_mean, rel=0.25, abs=2.0)
+    # Same histogram support scale: total mass within tolerance.
+    assert s_jx.latency_histogram.sum() == pytest.approx(
+        s_np.latency_histogram.sum(), rel=rtol, abs=25)
+    # Conservation: link-load totals count the same flows modulo detour
+    # randomness.
+    assert s_jx.link_loads.sum() == pytest.approx(
+        s_np.link_loads.sum(), rel=rtol, abs=50)
+
+
+# ---------------------------------------------------------------------------
+# Exact agreement on drained minimal workloads (every instance).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inst,n", [("swap", 8), ("circle", 8),
+                                    ("circle", 9), ("mirror", 9),
+                                    ("xor", 16)])
+def test_one_shot_a2a_exactly_matches_oracle(inst, n):
+    topo = sim.cin_topology(inst, n)
+    tr = sim.one_shot_all_to_all(n)
+    s_jx = xengine.simulate_jax(topo, sim.MinimalPolicy(), tr, terminals=4)
+    eng = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=4)
+    s_np = eng.run()
+    assert s_jx.packets_delivered == s_np.packets_delivered == n * (n - 1)
+    assert np.array_equal(s_jx.link_loads, s_np.link_loads)
+    assert eng.load.by_switch_pair() == cin_link_loads(inst, n)
+
+
+def test_one_shot_a2a_exact_on_compositions():
+    hx = make_fabric(HyperXConfig(dims=(4, 4), terminals=4)).sim_topology()
+    tr = sim.one_shot_all_to_all(16)
+    s_jx = xengine.simulate_jax(hx, sim.MinimalPolicy(), tr, terminals=4)
+    eng = sim.Engine(hx, sim.MinimalPolicy(), tr, terminals=4)
+    s_np = eng.run()
+    assert s_jx.packets_delivered == s_np.packets_delivered
+    assert np.array_equal(s_jx.link_loads, s_np.link_loads)
+
+    cfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                          global_ports_per_switch=2, num_groups=6)
+    dtopo = make_fabric(cfg).sim_topology()
+    tr = sim.one_shot_all_to_all(cfg.switches)
+    s_jx = xengine.simulate_jax(dtopo, sim.MinimalPolicy(), tr, terminals=4)
+    eng = sim.Engine(dtopo, sim.MinimalPolicy(), tr, terminals=4)
+    s_np = eng.run()
+    assert s_jx.packets_delivered == s_np.packets_delivered
+    assert np.array_equal(s_jx.link_loads, s_np.link_loads)
+
+
+def test_drain_mode_deadlock_freedom_nonminimal():
+    """Closed Valiant workload must fully drain on the compiled engine —
+    the distance-class VC ladder argument holds there too."""
+    topo = sim.cin_topology("xor", 16)
+    tr = sim.one_shot_all_to_all(16)
+    s = xengine.simulate_jax(topo, sim.ValiantPolicy(), tr, terminals=4,
+                             max_cycles=20_000)
+    assert s.packets_delivered == s.packets_generated == 240
+
+
+# ---------------------------------------------------------------------------
+# Statistical agreement: instances x policies (uniform traffic).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("inst,n", [("swap", 8), ("circle", 9),
+                                    ("mirror", 9), ("xor", 8)])
+@pytest.mark.parametrize("policy", ["minimal", "valiant", "adaptive"])
+def test_uniform_equivalence_instances_policies(inst, n, policy):
+    topo = sim.cin_topology(inst, n)
+    tr = sim.uniform(n, offered=0.5, cycles=CYCLES, terminals=T, seed=5)
+    s_np, s_jx = _both(topo, policy, tr)
+    _assert_statistical_match(s_np, s_jx)
+
+
+# ---------------------------------------------------------------------------
+# Statistical agreement: traffic patterns.
+# ---------------------------------------------------------------------------
+
+def test_permutation_equivalence():
+    topo = sim.cin_topology("xor", 16)
+    tr = sim.permutation(16, offered=0.6, cycles=CYCLES, terminals=T, seed=6)
+    s_np, s_jx = _both(topo, "minimal", tr)
+    _assert_statistical_match(s_np, s_jx)
+
+
+def test_hotspot_equivalence():
+    topo = sim.cin_topology("xor", 16)
+    tr = sim.hotspot(16, offered=0.3, cycles=CYCLES, terminals=T,
+                     hot_fraction=0.9, seed=7)
+    s_np, s_jx = _both(topo, "valiant", tr)
+    _assert_statistical_match(s_np, s_jx)
+
+
+def test_adversarial_equivalence_on_dragonfly():
+    cfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
+                          global_ports_per_switch=2, num_groups=8)
+    topo = make_fabric(cfg).sim_topology()
+    for policy in ("minimal", "valiant"):
+        tr = sim.adversarial_same_group(cfg, offered=0.3, cycles=400,
+                                        terminals=2, seed=8)
+        s_np, s_jx = _both(topo, policy, tr, terminals=2, cycles=400,
+                           warmup=100)
+        _assert_statistical_match(s_np, s_jx)
+    # and the §3 story survives the backend: valiant >> minimal here
+    tr = sim.adversarial_same_group(cfg, offered=0.3, cycles=400,
+                                    terminals=2, seed=8)
+    s_min = sim.simulate(topo, sim.MinimalPolicy(), tr, terminals=2,
+                         cycles=400, warmup=100, backend="jax")
+    s_val = sim.simulate(topo, sim.ValiantPolicy(), tr, terminals=2,
+                         cycles=400, warmup=100, backend="jax")
+    assert s_val.accepted > 1.5 * s_min.accepted
+
+
+# ---------------------------------------------------------------------------
+# Batched sweeps.
+# ---------------------------------------------------------------------------
+
+def test_batched_sweep_matches_pointwise_runs():
+    """One compiled (loads x seeds) program reports the same statistics
+    as running its points separately (identical traffic per point; the
+    shared arbitration key differs, hence statistical tolerance)."""
+    topo = sim.cin_topology("xor", 16)
+
+    def tf(load, seed):
+        return sim.uniform(16, offered=load, cycles=CYCLES, terminals=T,
+                           seed=seed)
+
+    loads, seeds = [0.3, 0.8], (1, 2)
+    grid = xengine.sweep(topo, "minimal", tf, loads, seeds=seeds,
+                         terminals=T, cycles=CYCLES, warmup=WARMUP)
+    assert len(grid) == len(loads) and len(grid[0]) == len(seeds)
+    for li, load in enumerate(loads):
+        for si, seed in enumerate(seeds):
+            ref = sim.simulate(topo, sim.MinimalPolicy(), tf(load, seed),
+                               terminals=T, cycles=CYCLES, warmup=WARMUP,
+                               backend="numpy", seed=seed)
+            got = grid[li][si]
+            assert got.offered == load
+            assert got.accepted == pytest.approx(ref.accepted, rel=0.12,
+                                                 abs=0.02)
+
+
+def test_fabric_sim_sweep_backends_agree():
+    fab = make_fabric("xor", 16)
+
+    def tf(load, seed):
+        return sim.uniform(16, offered=load, cycles=CYCLES, terminals=T,
+                           seed=seed)
+
+    kw = dict(seeds=(4,), terminals=T, cycles=CYCLES, warmup=WARMUP)
+    jx = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="jax", **kw)
+    np_ = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="numpy", **kw)
+    for row_jx, row_np in zip(jx, np_):
+        assert row_jx[0].accepted == pytest.approx(row_np[0].accepted,
+                                                   rel=0.12, abs=0.02)
+
+
+def test_sweep_rejects_mixed_horizons():
+    topo = sim.cin_topology("xor", 8)
+
+    def tf(load):
+        return sim.uniform(8, offered=load, cycles=100 + int(load * 100),
+                           terminals=2, seed=0)
+
+    with pytest.raises(ValueError, match="one cycle count"):
+        xengine.sweep(topo, "minimal", tf, [0.1, 0.9], terminals=2)
+
+
+def test_saturation_sweep_backend_switch():
+    topo = sim.cin_topology("xor", 8)
+
+    def tf(load):
+        return sim.uniform(8, offered=load, cycles=CYCLES, terminals=4,
+                           seed=9)
+
+    stats = sim.saturation_sweep(topo, sim.MinimalPolicy, tf, [0.2, 0.6],
+                                 terminals=4, cycles=CYCLES, warmup=WARMUP,
+                                 backend="jax")
+    assert [s.offered for s in stats] == [0.2, 0.6]
+    assert all(0 < s.accepted <= 1.2 for s in stats)
+
+
+# ---------------------------------------------------------------------------
+# Engine construction memoization (satellite).
+# ---------------------------------------------------------------------------
+
+def test_link_table_memoized_per_topology_and_vcs():
+    topo = sim.cin_topology("xor", 8)
+    tr = sim.uniform(8, offered=0.2, cycles=50, terminals=2, seed=0)
+    e1 = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=2)
+    e2 = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=2)
+    assert e1.links is e2.links
+    e3 = sim.Engine(topo, sim.ValiantPolicy(), tr, terminals=2)
+    assert e3.links is not e1.links          # different VC count
+    assert e3.num_vcs != e1.num_vcs
+
+
+def test_minimal_port_table_matches_routing():
+    topo = sim.cin_topology("circle", 9)
+    tbl = topo.minimal_port_table()
+    assert tbl is topo.minimal_port_table()  # cached
+    rng = np.random.default_rng(0)
+    cur = rng.integers(0, 9, 64)
+    tgt = rng.integers(0, 9, 64)
+    off = cur != tgt
+    assert np.array_equal(tbl[cur[off], tgt[off]],
+                          topo.minimal_port(cur[off], tgt[off]))
+
+
+def test_engine_pressure_updates_every_cycle_when_blocked():
+    """The EWMA congestion signal decays/updates on every step path,
+    including fully-blocked cycles (regression for the early-return
+    skip)."""
+    topo = sim.cin_topology("xor", 4)
+    tr = sim.uniform(4, offered=0.9, cycles=60, terminals=8, seed=1)
+    eng = sim.Engine(topo, sim.MinimalPolicy(), tr, terminals=8,
+                     queue_capacity=1, seed=1)
+    pressures = []
+    for _ in range(60):
+        eng.step()
+        pressures.append(eng.pressure.copy())
+    # pressure must keep moving cycle-over-cycle (no frozen stale reads)
+    diffs = [np.abs(a - b).sum() for a, b in zip(pressures, pressures[1:])]
+    assert np.count_nonzero(diffs) >= len(diffs) // 2
