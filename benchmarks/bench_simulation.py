@@ -16,19 +16,24 @@ Packet section (cycle-driven, queueing + credits + VCs):
 * a 256-switch HyperX uniform sweep and the Dragonfly same-group
   adversary.  Results are also written to ``benchmarks/BENCH_sim.json``
   so the perf trajectory is recorded run over run.
+
+Every sweep is driven through :mod:`repro.studies`: the grids are the
+*bundled spec files* (``repro/studies/specs/*.json``) — shrunk via
+``ExperimentSpec.with_sweep`` in quick mode — so ``python -m
+repro.studies run cin16_saturation`` reproduces exactly the saturation
+knees this module records.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
 import numpy as np
 
-from repro import sim
+from repro import sim, studies
 from repro.core import (all_to_all_steps, cin_link_loads, column_contention,
                         port_matrix, schedule_step_report)
-from repro.core.dragonfly import DragonflyConfig
-from repro.core.hyperx import HyperXConfig
 from repro.fabric import make_fabric
 from .common import quick, row, time_us
 
@@ -89,13 +94,19 @@ def _timed(fn, best_of: int = 1):
     return best * 1e6, result
 
 
+def _bundled(name: str) -> list[studies.ExperimentSpec]:
+    return studies.load_specs(studies.bundled_spec_path(name))
+
+
+def _run_study(specs, backend="jax") -> studies.StudyResult:
+    """One benchmark study run — no store, so every point really runs."""
+    return studies.Study(specs, backend=backend).run()
+
+
 def sim_rows():
     q = quick()
-    cycles = 400 if q else 1200
-    warmup = cycles // 4
-    t = 12
     out = []
-    all_stats = []
+    all_results: list[studies.Result] = []
 
     # cross-validation: packets reproduce the closed-form link loads, and
     # the compiled engine reproduces the oracle exactly (minimal routes
@@ -115,41 +126,37 @@ def sim_rows():
                    f"delivered_match={xs.packets_delivered == 240} "
                    f"loads_match={np.array_equal(xs.link_loads, eng.load.total)}"))
 
-    # Headline speed benchmark: the same (loads x seeds) uniform-minimal
-    # saturation sweep through both backends — a realistic
-    # confidence-interval sweep (multiple seeds per point, horizon long
-    # enough for steady-state statistics), identical in quick and full
-    # modes so the recorded trajectory is comparable run over run.  The
-    # jax number is the steady-state wall-clock of the batched compiled
-    # program (compile time reported separately — it amortizes across
-    # every later sweep of the same shape in the process).
+    # Headline speed benchmark: one ExperimentSpec, run through both Study
+    # backends — a realistic confidence-interval sweep (multiple seeds per
+    # point, horizon long enough for steady-state statistics), identical
+    # in quick and full modes so the recorded trajectory is comparable run
+    # over run.  The jax number is the steady-state wall-clock of the
+    # batched compiled program (compile time reported separately — it
+    # amortizes across every later same-shape study in the process).
     speed_cycles = 1600
-    speed_loads = [0.5, 0.7, 0.9]
-    speed_seeds = tuple(range(31, 39))
-
-    def tf_speed(load, seed):
-        return sim.uniform(16, offered=load, cycles=speed_cycles,
-                           terminals=t, seed=seed)
-
-    us_np, grid_np = _timed(lambda: fab16.sim_sweep(
-        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
-        backend="numpy", terminals=t, cycles=speed_cycles,
-        warmup=speed_cycles // 4), best_of=2)
-    us_cold, _ = _timed(lambda: fab16.sim_sweep(
-        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
-        backend="jax", terminals=t, cycles=speed_cycles,
-        warmup=speed_cycles // 4))
-    us_jax, grid_jax = _timed(lambda: fab16.sim_sweep(
-        "minimal", tf_speed, speed_loads, seeds=speed_seeds,
-        backend="jax", terminals=t, cycles=speed_cycles,
-        warmup=speed_cycles // 4), best_of=2)
-    lane_cycles = len(speed_loads) * len(speed_seeds) * speed_cycles
-    acc_np = np.mean([[s.accepted for s in ss] for ss in grid_np], axis=1)
-    acc_jx = np.mean([[s.accepted for s in ss] for ss in grid_jax], axis=1)
+    speed_exp = studies.ExperimentSpec(
+        fabric=studies.FabricSpec("cin", {"instance": "xor", "n": 16}),
+        traffic=studies.TrafficSpec("uniform"),
+        routing=studies.RoutingSpec("minimal"),
+        sweep=studies.SweepSpec(loads=(0.5, 0.7, 0.9),
+                                seeds=tuple(range(31, 39)),
+                                cycles=speed_cycles,
+                                warmup=speed_cycles // 4),
+        terminals=12, name="speed/cin16/uniform/minimal")
+    us_np, out_np = _timed(lambda: _run_study(speed_exp, "numpy"), best_of=2)
+    us_cold, _ = _timed(lambda: _run_study(speed_exp, "jax"))
+    us_jax, out_jx = _timed(lambda: _run_study(speed_exp, "jax"), best_of=2)
+    lane_cycles = len(speed_exp.sweep.loads) * len(speed_exp.sweep.seeds) \
+        * speed_cycles
+    acc_np = np.mean([[r.accepted for r in ss] for ss in out_np.grid()],
+                     axis=1)
+    acc_jx = np.mean([[r.accepted for r in ss] for ss in out_jx.grid()],
+                     axis=1)
     agree = bool(np.allclose(acc_np, acc_jx, rtol=0.05, atol=0.01))
     sim_speed = {
-        "workload": (f"cin16/uniform/minimal {len(speed_loads)} loads x "
-                     f"{len(speed_seeds)} seeds x {speed_cycles} cycles"),
+        "workload": (f"cin16/uniform/minimal {len(speed_exp.sweep.loads)} "
+                     f"loads x {len(speed_exp.sweep.seeds)} seeds x "
+                     f"{speed_cycles} cycles"),
         "numpy_s": round(us_np / 1e6, 4),
         "jax_steady_s": round(us_jax / 1e6, 4),
         "jax_cold_s": round(us_cold / 1e6, 4),
@@ -167,88 +174,64 @@ def sim_rows():
                    f"(with_compile={us_np / us_cold:.1f}x) agree={agree}"))
 
     # CIN sweeps: minimal vs valiant vs adaptive, uniform + hot-pair —
-    # each sweep is one compiled batched program now.
-    uni_loads = [0.5, 0.9] if q else [0.3, 0.5, 0.7, 0.9]
-    hot_loads = [0.2, 0.4] if q else [0.05, 0.2, 0.4, 0.6]
-    patterns = {
-        "uniform": (uni_loads, lambda load: sim.uniform(
-            16, offered=load, cycles=cycles, terminals=t, seed=21)),
-        "hotspot": (hot_loads, lambda load: sim.hotspot(
-            16, offered=load, cycles=cycles, terminals=t, hot_fraction=0.9,
-            seed=22)),
-    }
-    for pat, (loads, tf) in patterns.items():
-        for pol in ("minimal", "valiant", "adaptive"):
-            us, stats = _timed(lambda: sim.saturation_sweep(
-                topo16, lambda: sim.make_policy(pol), tf, loads,
-                terminals=t, cycles=cycles, warmup=warmup, seed=23,
-                backend="jax"))
-            all_stats.extend(stats)
-            knee = sim.saturation_point(stats)
-            acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
-            out.append(row(f"sim/cin16/{pat}/{pol}", us,
-                           f"accepted[{acc}] knee={knee}"))
+    # the bundled cin16_saturation spec, one compiled program per
+    # experiment (quick mode shrinks the grids).
+    for exp in _bundled("cin16_saturation"):
+        if q:
+            loads = ((0.5, 0.9) if exp.traffic.pattern == "uniform"
+                     else (0.2, 0.4))
+            exp = exp.with_sweep(loads=loads, cycles=400, warmup=100)
+        us, res = _timed(lambda e=exp: _run_study(e))
+        all_results.extend(res.results)
+        knee = res.saturation_points()[exp.name]
+        acc = " ".join(f"{r.offered:.2f}:{r.accepted:.3f}"
+                       for r in res.results)
+        out.append(row(f"sim/cin16/{exp.traffic.pattern}"
+                       f"/{exp.routing.policy}", us,
+                       f"accepted[{acc}] knee={knee}"))
 
     # 256-switch HyperX saturation sweep, batched into one program.
-    hx = make_fabric(HyperXConfig(dims=(16, 16), terminals=8))
-    hx_cycles = 300 if q else 600
-    hx_loads = [0.5] if q else [0.3, 0.6]
-
-    def hx_tf(load, seed):
-        return sim.uniform(256, offered=load, cycles=hx_cycles, terminals=8,
-                           seed=seed)
-
-    us, grid = _timed(lambda: hx.sim_sweep(
-        "minimal", hx_tf, hx_loads, seeds=(24,), terminals=8,
-        cycles=hx_cycles, warmup=hx_cycles // 4))
-    stats = [ss[0] for ss in grid]
-    all_stats.extend(stats)
-    acc = " ".join(f"{s.offered:.2f}:{s.accepted:.3f}" for s in stats)
+    [hx_exp] = _bundled("hyperx256_uniform")
+    if q:
+        hx_exp = hx_exp.with_sweep(loads=(0.5,), cycles=300, warmup=75)
+    us, res = _timed(lambda: _run_study(hx_exp))
+    all_results.extend(res.results)
+    acc = " ".join(f"{r.offered:.2f}:{r.accepted:.3f}" for r in res.results)
     out.append(row("sim/hyperx256/uniform/minimal", us,
-                   f"accepted[{acc}] lat_p99={stats[-1].latency_p99:.0f}"))
+                   f"accepted[{acc}] "
+                   f"lat_p99={res.results[-1].latency_p99:.0f}"))
 
-    # Dragonfly same-group adversary: minimal chokes, valiant doesn't
-    dcfg = DragonflyConfig(group_size=4, terminals_per_switch=2,
-                           global_ports_per_switch=2, num_groups=8)
-    dtopo = make_fabric(dcfg).sim_topology()
-    d_cycles = 400 if q else 1000
-    for pol in ("minimal", "valiant", "adaptive"):
-        tr = sim.adversarial_same_group(dcfg, offered=0.3, cycles=d_cycles,
-                                        terminals=2, seed=25)
-        us, stats = _timed(lambda: sim.simulate(
-            dtopo, sim.make_policy(pol), tr, terminals=2, cycles=d_cycles,
-            warmup=d_cycles // 4, seed=25, backend="jax"))
-        all_stats.append(stats)
-        out.append(row(f"sim/dragonfly/adversarial/{pol}", us,
-                       f"accepted={stats.accepted:.3f} "
-                       f"lat_mean={stats.latency_mean:.1f}"))
+    # Dragonfly same-group adversary: minimal chokes, valiant doesn't.
+    for exp in _bundled("dragonfly_adversarial"):
+        if q:
+            exp = exp.with_sweep(cycles=400, warmup=100)
+        us, res = _timed(lambda e=exp: _run_study(e))
+        all_results.extend(res.results)
+        r = res.results[0]
+        out.append(row(f"sim/dragonfly/adversarial/{exp.routing.policy}", us,
+                       f"accepted={r.accepted:.3f} "
+                       f"lat_mean={r.latency_mean:.1f}"))
 
     # 72-switch Dragonfly (a=6, h=2, g=12) — the sweep size the
     # interpreted engine made impractical to iterate on.
-    d72 = make_fabric(DragonflyConfig(group_size=6, terminals_per_switch=3,
-                                      global_ports_per_switch=2,
-                                      num_groups=12))
-    d72_cycles = 300 if q else 800
-    d72_loads = [0.2, 0.4] if q else [0.1, 0.2, 0.3, 0.4]
-
-    def d72_tf(load, seed):
-        return sim.uniform(72, offered=load, cycles=d72_cycles, terminals=3,
-                           seed=seed)
-
-    for pol in ("minimal", "valiant"):
-        us, grid = _timed(lambda: d72.sim_sweep(
-            pol, d72_tf, d72_loads, seeds=(26, 27), terminals=3,
-            cycles=d72_cycles, warmup=d72_cycles // 4))
-        stats = [s for ss in grid for s in ss]
-        all_stats.extend(stats)
+    for exp in _bundled("dragonfly72_uniform"):
+        if q:
+            exp = exp.with_sweep(loads=(0.2, 0.4), cycles=300, warmup=75)
+        us, res = _timed(lambda e=exp: _run_study(e))
+        all_results.extend(res.results)
+        grid = res.grid()
         acc = " ".join(f"{ss[0].offered:.2f}:"
-                       f"{sum(s.accepted for s in ss) / len(ss):.3f}"
+                       f"{sum(r.accepted for r in ss) / len(ss):.3f}"
                        for ss in grid)
-        out.append(row(f"sim/dragonfly72/uniform/{pol}", us,
-                       f"accepted[{acc}] ({len(stats)} runs, one program)"))
+        out.append(row(f"sim/dragonfly72/uniform/{exp.routing.policy}", us,
+                       f"accepted[{acc}] ({len(res.results)} runs, "
+                       f"one program)"))
 
-    sim.save_json(all_stats, _ARTIFACT,
-                  extra={"quick": q, "sim_speed": sim_speed})
+    payload = {"records": [r.record() for r in all_results],
+               "quick": q, "sim_speed": sim_speed}
+    with open(_ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
     return out
 
 

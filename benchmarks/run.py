@@ -8,9 +8,12 @@ first for the full table).
 single repeat with no warmup, and modules that opt in via
 ``common.quick()`` additionally shrink their workloads (the simulator
 module shortens its sweeps; the multi-device collective subprocesses run
-at full size either way).  The simulator module also writes a
-``benchmarks/BENCH_sim.json`` artifact so the latency/throughput
-trajectory of the packet simulator is recorded per run.
+at full size either way).  The simulator module drives every sweep
+through :mod:`repro.studies` (the bundled spec files, shrunk via
+``ExperimentSpec.with_sweep`` in quick mode) and writes the unified
+result records to the ``benchmarks/BENCH_sim.json`` artifact, so the
+latency/throughput trajectory it records per run is exactly what
+``python -m repro.studies run cin16_saturation`` (etc.) reproduces.
 """
 from __future__ import annotations
 

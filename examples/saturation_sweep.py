@@ -1,13 +1,14 @@
 """Saturation sweep demo: offered load vs accepted throughput + latency.
 
-Sweeps the packet-level simulator over a topology and prints one table
-per traffic pattern, comparing routing policies — the experiment shape
-behind the paper's §3 minimal-vs-non-minimal discussion.
+Builds declarative :mod:`repro.studies` experiment specs — one per
+(traffic pattern, routing policy) — and runs them as a Study, printing
+one table per traffic pattern: the experiment shape behind the paper's
+§3 minimal-vs-non-minimal discussion.
 
-By default the sweep runs on the compiled JAX engine
-(:mod:`repro.sim.xengine`): every (load, seed) point batches into one
-jit-compiled program.  ``--backend numpy`` uses the interpreted oracle
-engine instead (one Python iteration per simulated cycle).
+The Study auto-selects the backend (the compiled JAX engine batches
+every (load, seed) point of an experiment into one jit-compiled
+program; ``--backend numpy`` forces the interpreted oracle), and with
+``--store`` it streams JSONL result records that a re-run resumes from.
 
 Usage (from the repo root):
 
@@ -15,8 +16,14 @@ Usage (from the repo root):
     PYTHONPATH=src python examples/saturation_sweep.py --topo hyperx --dims 8,8
     PYTHONPATH=src python examples/saturation_sweep.py --topo dragonfly \
         --traffic adversarial --policies minimal,valiant
-    PYTHONPATH=src python examples/saturation_sweep.py --seeds 0,1,2 --json sweep.json
+    PYTHONPATH=src python examples/saturation_sweep.py --seeds 0,1,2 \
+        --store sweep.jsonl
     PYTHONPATH=src python examples/saturation_sweep.py --backend numpy
+
+    # the same sweep as a reusable spec file:
+    PYTHONPATH=src python examples/saturation_sweep.py --emit-spec my.json
+    PYTHONPATH=src python examples/saturation_sweep.py --spec my.json
+    PYTHONPATH=src python examples/saturation_sweep.py --spec cin16_saturation
 """
 from __future__ import annotations
 
@@ -24,52 +31,52 @@ import argparse
 import sys
 import time
 
-from repro import sim
-from repro.core.dragonfly import DragonflyConfig
-from repro.core.hyperx import HyperXConfig
+from repro import studies
+from repro.sim.report import format_table
 
 
-def build_topology(args):
+def build_fabric_spec(args) -> studies.FabricSpec:
     if args.topo == "cin":
-        return sim.cin_topology(args.instance, args.n)
+        return studies.FabricSpec("cin", {"instance": args.instance,
+                                          "n": args.n})
     if args.topo == "hyperx":
-        dims = tuple(int(d) for d in args.dims.split(","))
-        return sim.hyperx_topology(HyperXConfig(dims=dims,
-                                                terminals=args.terminals,
-                                                instance=args.instance))
+        dims = [int(d) for d in args.dims.split(",")]
+        return studies.FabricSpec("hyperx", {"dims": dims,
+                                             "terminals": args.terminals,
+                                             "instance": args.instance})
     if args.topo == "dragonfly":
-        return sim.dragonfly_topology(DragonflyConfig(
-            group_size=4, terminals_per_switch=args.terminals,
-            global_ports_per_switch=2, num_groups=8))
+        return studies.FabricSpec("dragonfly", {
+            "group_size": 4, "terminals_per_switch": args.terminals,
+            "global_ports_per_switch": 2, "num_groups": 8})
     raise SystemExit(f"unknown topology {args.topo!r}")
 
 
-def traffic_factory(args, topo, pattern):
-    n = topo.num_switches
-    if pattern == "uniform":
-        return lambda load, seed: sim.uniform(
-            n, offered=load, cycles=args.cycles, terminals=args.terminals,
-            seed=seed)
-    if pattern == "hotspot":
-        return lambda load, seed: sim.hotspot(
-            n, offered=load, cycles=args.cycles, terminals=args.terminals,
-            hot_fraction=0.9, seed=seed)
-    if pattern == "permutation":
-        return lambda load, seed: sim.permutation(
-            n, offered=load, cycles=args.cycles, terminals=args.terminals,
-            seed=seed)
-    if pattern == "adversarial":
-        cfg = topo.meta.get("config")
-        if not isinstance(cfg, DragonflyConfig):
-            raise SystemExit("adversarial traffic needs --topo dragonfly")
-        return lambda load, seed: sim.adversarial_same_group(
-            cfg, offered=load, cycles=args.cycles, terminals=args.terminals,
-            seed=seed)
-    raise SystemExit(f"unknown traffic pattern {pattern!r}")
+def build_specs(args) -> list[studies.ExperimentSpec]:
+    fabric = build_fabric_spec(args)
+    loads = tuple(float(x) for x in args.loads.split(","))
+    seeds = tuple(int(s) for s in args.seeds.split(","))
+    sweep = studies.SweepSpec(loads=loads, seeds=seeds, cycles=args.cycles,
+                              warmup=args.cycles // 4)
+    traffic_params = {"hotspot": {"hot_fraction": 0.9}}
+    specs = []
+    for pattern in args.traffic.split(","):
+        traffic = studies.TrafficSpec(pattern,
+                                      traffic_params.get(pattern, {}))
+        for pol in args.policies.split(","):
+            specs.append(studies.ExperimentSpec(
+                fabric=fabric, traffic=traffic,
+                routing=studies.RoutingSpec(pol), sweep=sweep,
+                terminals=args.terminals))
+    return specs
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--spec", default=None,
+                    help="run this spec file (or bundled spec name) instead "
+                         "of building one from the flags below")
+    ap.add_argument("--emit-spec", default=None, metavar="PATH",
+                    help="write the spec the flags describe to PATH and exit")
     ap.add_argument("--topo", default="cin",
                     choices=["cin", "hyperx", "dragonfly"])
     ap.add_argument("--instance", default="xor",
@@ -86,52 +93,49 @@ def main(argv=None):
     ap.add_argument("--seeds", default="0",
                     help="comma list; the jax backend batches all seeds "
                          "with all loads into one compiled program")
-    ap.add_argument("--backend", default="jax", choices=["jax", "numpy"],
-                    help="jax = compiled batched engine, numpy = oracle")
-    ap.add_argument("--json", default=None, help="write records to this path")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jax", "numpy"],
+                    help="auto picks the compiled batched engine when "
+                         "JAX is available")
+    ap.add_argument("--store", default=None,
+                    help="stream result records to this JSONL store "
+                         "(re-runs resume from it)")
     args = ap.parse_args(argv)
 
-    topo = build_topology(args)
-    loads = [float(x) for x in args.loads.split(",")]
-    seeds = tuple(int(s) for s in args.seeds.split(","))
-    policies = args.policies.split(",")
-    print(f"topology: {topo.name}  switches={topo.num_switches} "
-          f"ports={topo.num_ports} links={topo.num_links} "
-          f"terminals={args.terminals} backend={args.backend}")
+    if args.spec is not None:
+        specs = studies.load_specs(studies.resolve_spec_source(args.spec))
+    else:
+        specs = build_specs(args)
 
-    everything = []
-    for pattern in args.traffic.split(","):
-        tf = traffic_factory(args, topo, pattern)
-        t0 = time.time()
-        stats = []
-        for pol in policies:
-            if args.backend == "jax":
-                grid = sim.sim_sweep(
-                    topo, pol, tf, loads, seeds=seeds,
-                    terminals=args.terminals, cycles=args.cycles,
-                    warmup=args.cycles // 4)
-                stats += [s for per_load in grid for s in per_load]
-            else:
-                for seed in seeds:
-                    stats += sim.saturation_sweep(
-                        topo, lambda p=pol: sim.make_policy(p),
-                        lambda load, s=seed: tf(load, s), loads,
-                        terminals=args.terminals, cycles=args.cycles,
-                        warmup=args.cycles // 4, seed=seed)
-        everything += stats
-        print(f"\n== {pattern} traffic "
-              f"({len(policies) * len(loads) * len(seeds)} runs, "
-              f"{time.time() - t0:.1f}s) ==")
-        print(sim.format_table(stats))
-        for pol in policies:
-            knee = sim.saturation_point(
-                [s for s in stats if s.policy == pol])
-            print(f"  saturation point ({pol}): "
-                  f"{knee if knee is not None else '> max load'}")
+    if args.emit_spec:
+        studies.dump_specs(specs, args.emit_spec, study="saturation_sweep",
+                           description="generated by examples/"
+                                       "saturation_sweep.py")
+        print(f"wrote {len(specs)} experiments to {args.emit_spec}")
+        return 0
 
-    if args.json:
-        sim.save_json(everything, args.json)
-        print(f"\nwrote {len(everything)} records to {args.json}")
+    study = studies.Study(specs, store=args.store, backend=args.backend)
+    first = specs[0].fabric.resolve_topology()
+    print(f"topology: {first.name}  switches={first.num_switches} "
+          f"ports={first.num_ports} links={first.num_links}")
+
+    t0 = time.time()
+    out = study.run()
+    print(f"ran {out.executed} grid points ({out.restored} restored) on "
+          f"backend={out.backend} in {time.time() - t0:.1f}s")
+
+    by_pattern: dict[str, list[studies.Result]] = {}
+    for r in out.results:
+        by_pattern.setdefault(r.traffic, []).append(r)
+    knees = out.saturation_points()
+    for pattern, results in by_pattern.items():
+        print(f"\n== {pattern} traffic ({len(results)} runs) ==")
+        print(format_table(results))
+    for name, knee in knees.items():
+        print(f"  saturation point ({name}): "
+              f"{knee if knee is not None else '> max load'}")
+    if args.store:
+        print(f"\nresult store: {args.store}")
 
 
 if __name__ == "__main__":

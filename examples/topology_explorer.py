@@ -3,6 +3,13 @@
     PYTHONPATH=src python examples/topology_explorer.py cin --instance circle --n 12
     PYTHONPATH=src python examples/topology_explorer.py hyperx --dims 8 8 8 --terminals 8
     PYTHONPATH=src python examples/topology_explorer.py dragonfly --groups 16 --group-size 8
+
+A :mod:`repro.studies` spec file (or bundled spec name) names its
+fabrics declaratively, so the explorer can open those too — one report
+per distinct fabric in the study:
+
+    PYTHONPATH=src python examples/topology_explorer.py spec cin16_saturation
+    PYTHONPATH=src python examples/topology_explorer.py spec my_experiment.json
 """
 import argparse
 
@@ -55,6 +62,27 @@ def show_dragonfly(args):
           d.route_packet((0, 0, 0), (args.groups - 1, args.group_size - 1, 1)))
 
 
+def show_spec(args):
+    """Every distinct fabric a study spec file names, verified."""
+    from repro import studies
+    src = studies.resolve_spec_source(args.spec)
+    specs = studies.load_specs(src)
+    seen = {}
+    for exp in specs:
+        key = exp.fabric.to_json()
+        seen.setdefault(key, (exp.fabric, []))[1].append(exp)
+    print(f"{src}: {len(specs)} experiments over {len(seen)} fabrics")
+    for fabric_spec, exps in seen.values():
+        fab = fabric_spec.resolve()
+        print(f"\n== {fab.name} ({fabric_spec.kind}) ==")
+        for k, v in fab.deployment().items():
+            print(f"  {k} = {v}")
+        report = fab.verify()
+        print(f"  verify ok = {report['ok']}")
+        for exp in exps:
+            print(f"  - {exp.describe()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -71,9 +99,11 @@ def main():
     d.add_argument("--group-size", type=int, default=8)
     d.add_argument("--terminals", type=int, default=4)
     d.add_argument("--global-ports", type=int, default=2)
+    s = sub.add_parser("spec", help="inspect the fabrics of a study spec")
+    s.add_argument("spec", help="spec file path or bundled spec name")
     args = ap.parse_args()
     {"cin": show_cin, "hyperx": show_hyperx,
-     "dragonfly": show_dragonfly}[args.cmd](args)
+     "dragonfly": show_dragonfly, "spec": show_spec}[args.cmd](args)
 
 
 if __name__ == "__main__":

@@ -72,42 +72,37 @@ class Fabric(abc.ABC):
         """Construct the SimTopology (uncached)."""
 
     def sim_sweep(self, policy, traffic_factory, loads, *,
-                  seeds=(0,), backend: str = "jax", terminals: int = 1,
+                  seeds=(0,), backend: str = "jax",
+                  terminals: int | None = None,
                   cycles: int | None = None, warmup: int | None = None,
                   **sim_kw):
-        """Packet-level saturation sweep of this fabric.
+        """Deprecated shim: packet-level saturation sweep of this fabric.
 
-        ``policy`` is a policy name (``"minimal"``/``"valiant"``/
-        ``"adaptive"``), a :class:`~repro.sim.policies.RoutingPolicy`, or
-        a zero-arg factory; ``traffic_factory`` maps an offered load (or
-        ``(load, seed)``) to a :class:`~repro.sim.traffic.Traffic`.
+        Describe the sweep as a :class:`repro.studies.ExperimentSpec`
+        (``FabricSpec.from_fabric(fab)`` names this fabric declaratively)
+        and run it with :class:`repro.studies.Study` instead — same
+        batched compiled program, plus persistence/resume/spec files.
         Returns a ``[load][seed]`` grid of RunStats.
-
-        ``backend="jax"`` (default) compiles the whole (load, seed) grid
-        into one batched program (:mod:`repro.sim.xengine`);
-        ``backend="numpy"`` loops the oracle engine over the grid — same
-        statistics, one interpreted run per point.
         """
-        from repro.sim import xengine
-        from repro.sim.report import saturation_sweep
-        topo = self.sim_topology()
-        if backend == "jax":
-            return xengine.sweep(topo, policy, traffic_factory, loads,
-                                 seeds=seeds, terminals=terminals,
-                                 cycles=cycles, warmup=warmup, **sim_kw)
-        # numpy: one interpreted saturation_sweep per seed, transposed to
-        # the same [load][seed] grid the compiled path returns.
-        seeded = xengine._accepts_seed(traffic_factory)
-        per_seed_sweeps = [
-            saturation_sweep(
-                topo, lambda: xengine._resolve_policy(policy),
-                (lambda load, s=seed: traffic_factory(load, s)) if seeded
-                else traffic_factory,
-                loads, terminals=terminals, cycles=cycles, warmup=warmup,
-                seed=seed, backend=backend, **sim_kw)
-            for seed in seeds]
-        return [[sweep_[li] for sweep_ in per_seed_sweeps]
-                for li in range(len(loads))]
+        import warnings
+
+        from repro._compat import LacinDeprecationWarning
+        from repro.studies import (ExperimentSpec, FabricSpec, RoutingSpec,
+                                   Study, SweepSpec, TrafficSpec)
+        warnings.warn(
+            "Fabric.sim_sweep is deprecated; describe the sweep as a "
+            "repro.studies.ExperimentSpec and run it with "
+            "repro.studies.Study (see README 'Running studies')",
+            LacinDeprecationWarning, stacklevel=2)
+        spec = ExperimentSpec(
+            fabric=FabricSpec.from_fabric(self),
+            traffic=TrafficSpec.custom(traffic_factory),
+            routing=RoutingSpec.custom(policy),
+            sweep=SweepSpec(loads=tuple(loads), seeds=tuple(seeds),
+                            cycles=cycles, warmup=warmup),
+            terminals=terminals, engine=dict(sim_kw))
+        out = Study(spec, backend=backend).run()
+        return [[r.stats for r in row] for row in out.grid()]
 
     @abc.abstractmethod
     def link_loads(self, traffic="uniform") -> dict:

@@ -12,9 +12,16 @@ Quickstart::
     from repro import sim
     topo = sim.cin_topology("xor", 16)
     tr = sim.uniform(16, offered=0.6, cycles=1000, terminals=4)
-    stats = sim.simulate(topo, sim.MinimalPolicy(), tr,
-                         terminals=4, warmup=250)
+    stats = sim.simulate(topo, sim.MinimalPolicy(), tr, warmup=250)
     print(stats.accepted, stats.latency_p99)
+
+(``simulate`` defaults its ``terminals`` to the traffic object's record
+and raises on an explicit mismatch.)  For experiment *grids* — loads x
+seeds x policies, persisted and resumable — describe a
+:class:`repro.studies.ExperimentSpec` and run it with
+:class:`repro.studies.Study`; the sweep helpers here
+(``saturation_sweep``/``compare_policies``) are deprecated shims over
+that API.
 """
 from .topology import (SimTopology, cin_topology, dragonfly_topology,
                        hyperx_topology, routed_link_loads)

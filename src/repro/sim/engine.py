@@ -31,7 +31,7 @@ from .metrics import RunStats, build_stats
 from .policies import RoutingPolicy
 from .switch import QueueFabric, arbitrate
 from .topology import SimTopology
-from .traffic import Traffic
+from .traffic import Traffic, resolve_terminals
 
 _DRAIN_SLACK = 100_000   # safety cap on drain cycles for closed workloads
 
@@ -40,12 +40,17 @@ class Engine:
     """One simulation run; construct fresh per run."""
 
     def __init__(self, topo: SimTopology, policy: RoutingPolicy,
-                 traffic: Traffic, *, terminals: int = 1,
+                 traffic: Traffic, *, terminals: int | None = None,
                  eject_bw: int | None = None, num_vcs: int | None = None,
                  queue_capacity: int = 4, seed: int = 0):
         self.topo = topo
         self.policy = policy
         self.traffic = traffic
+        # None defaults to the traffic object's record; an explicit value
+        # must agree with it (the offered load is scaled by the traffic's
+        # terminals, so a disagreement silently mis-normalizes accepted
+        # throughput).
+        terminals = resolve_terminals(traffic, terminals)
         self.terminals = terminals
         self.eject_bw = terminals if eject_bw is None else eject_bw
         if num_vcs is None:
@@ -244,13 +249,17 @@ class Engine:
 
 
 def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
-             terminals: int = 1, eject_bw: int | None = None,
+             terminals: int | None = None, eject_bw: int | None = None,
              num_vcs: int | None = None, queue_capacity: int = 4,
              cycles: int | None = None,
              warmup: int = 0, drain: bool | None = None,
              max_cycles: int | None = None, seed: int = 0,
              backend: str = "numpy") -> RunStats:
     """Run one simulation; ``backend`` picks the engine.
+
+    ``terminals`` defaults to what the traffic object was generated with
+    (:func:`repro.sim.traffic.resolve_terminals`); passing a disagreeing
+    explicit value raises.
 
     * ``"numpy"`` — the interpreted oracle :class:`Engine` (one Python
       iteration per cycle; reference semantics).

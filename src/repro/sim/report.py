@@ -2,51 +2,70 @@
 
 The central experiment shape of the interconnect literature: sweep offered
 load, record accepted throughput + latency per point, find the knee.
+
+:func:`saturation_sweep` and :func:`compare_policies` are **deprecated
+shims** over :mod:`repro.studies` — the declarative experiment API that
+replaced the repo's divergent sweep entry points.  They keep their exact
+legacy behaviour (the specs they build resolve to the same engine calls)
+but warn with :class:`repro.fabric.LacinDeprecationWarning` for one
+release; see README's migration table.
 """
 from __future__ import annotations
 
 import json
+import warnings
 from typing import Callable, Sequence
 
 import numpy as np
 
-from .engine import simulate
+from repro._compat import LacinDeprecationWarning
+
 from .metrics import RunStats
-from .policies import RoutingPolicy, make_policy
+from .policies import RoutingPolicy
 from .topology import SimTopology
 from .traffic import Traffic
+
+
+def _sweep_spec(topo: SimTopology, policy, traffic_factory, loads, seeds, *,
+                terminals, cycles, warmup, sim_kw):
+    """The :class:`repro.studies.ExperimentSpec` a legacy sweep call
+    describes (inline traffic/policy carriers, so any callable works)."""
+    from repro.studies import (ExperimentSpec, FabricSpec, RoutingSpec,
+                               SweepSpec, TrafficSpec)
+    return ExperimentSpec(
+        fabric=FabricSpec.from_topology(topo),
+        traffic=TrafficSpec.custom(traffic_factory),
+        routing=RoutingSpec.custom(policy),
+        sweep=SweepSpec(loads=tuple(loads), seeds=tuple(seeds),
+                        cycles=cycles, warmup=warmup),
+        terminals=terminals, engine=dict(sim_kw))
 
 
 def saturation_sweep(topo: SimTopology,
                      policy_factory: Callable[[], RoutingPolicy],
                      traffic_factory: Callable[[float], Traffic],
-                     loads: Sequence[float], *, terminals: int = 1,
+                     loads: Sequence[float], *, terminals: int | None = None,
                      cycles: int | None = None, warmup: int | None = None,
                      seed: int = 0, backend: str = "numpy",
                      **sim_kw) -> list[RunStats]:
-    """One run per offered load; a fresh policy and traffic object each.
+    """Deprecated shim: one run per offered load, through a Study.
 
-    ``backend="jax"`` compiles the whole sweep into one batched program
-    (:func:`repro.sim.xengine.sweep`) instead of looping runs in Python;
-    pass ``cycles=`` explicitly in that case so every point shares one
-    horizon.  For multi-seed grids use :func:`repro.sim.xengine.sweep`
-    (or ``Fabric.sim_sweep``) directly.
+    Build a :class:`repro.studies.ExperimentSpec` and run it with
+    :class:`repro.studies.Study` instead — that adds multi-seed grids,
+    JSONL persistence, resume, and spec files, and picks the backend
+    automatically.
     """
-    if backend == "jax":
-        from .xengine import sweep as xsweep
-        grid = xsweep(topo, policy_factory, traffic_factory, loads,
-                      seeds=(seed,), terminals=terminals, cycles=cycles,
-                      warmup=warmup, **sim_kw)
-        return [per_load[0] for per_load in grid]
-    out = []
-    for load in loads:
-        traffic = traffic_factory(load)
-        n_cycles = cycles if cycles is not None else traffic.horizon
-        wu = warmup if warmup is not None else n_cycles // 4
-        out.append(simulate(topo, policy_factory(), traffic,
-                            terminals=terminals, cycles=n_cycles, warmup=wu,
-                            seed=seed, backend=backend, **sim_kw))
-    return out
+    warnings.warn(
+        "repro.sim.report.saturation_sweep is deprecated; describe the "
+        "sweep as a repro.studies.ExperimentSpec and run it with "
+        "repro.studies.Study (see README 'Running studies')",
+        LacinDeprecationWarning, stacklevel=2)
+    from repro.studies import Study
+    spec = _sweep_spec(topo, policy_factory, traffic_factory, loads, (seed,),
+                       terminals=terminals, cycles=cycles, warmup=warmup,
+                       sim_kw=sim_kw)
+    out = Study(spec, backend=backend).run()
+    return [row[0].stats for row in out.grid()]
 
 
 def saturation_point(stats: Sequence[RunStats], *, threshold: float = 0.95
@@ -109,8 +128,22 @@ def format_table(stats: Sequence[RunStats]) -> str:
 
 def compare_policies(topo: SimTopology, policies: Sequence[str],
                      traffic_factory: Callable[[float], Traffic],
-                     loads: Sequence[float], **kw) -> dict[str, list[RunStats]]:
-    """Sweep several named policies over the same traffic factory."""
-    return {name: saturation_sweep(topo, lambda n=name: make_policy(n),
-                                   traffic_factory, loads, **kw)
-            for name in policies}
+                     loads: Sequence[float], *, terminals: int | None = None,
+                     cycles: int | None = None, warmup: int | None = None,
+                     seed: int = 0, backend: str = "numpy",
+                     **sim_kw) -> dict[str, list[RunStats]]:
+    """Deprecated shim: several named policies as one multi-experiment
+    :class:`repro.studies.Study` over the same traffic factory."""
+    warnings.warn(
+        "repro.sim.report.compare_policies is deprecated; build one "
+        "repro.studies.ExperimentSpec per policy and run them as a single "
+        "repro.studies.Study (see README 'Running studies')",
+        LacinDeprecationWarning, stacklevel=2)
+    from repro.studies import Study
+    specs = [_sweep_spec(topo, name, traffic_factory, loads, (seed,),
+                         terminals=terminals, cycles=cycles, warmup=warmup,
+                         sim_kw=sim_kw)
+             for name in policies]
+    out = Study(specs, backend=backend).run()
+    return {name: [row[0].stats for row in out.grid(spec.name)]
+            for name, spec in zip(policies, specs)}

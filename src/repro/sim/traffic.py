@@ -32,17 +32,44 @@ from repro.core.dragonfly import DragonflyConfig
 
 @dataclass
 class Traffic:
-    """Flat packet descriptors; ``offered == 0`` marks a one-shot workload."""
+    """Flat packet descriptors; ``offered == 0`` marks a one-shot workload.
+
+    ``terminals`` records the injector count the generator scaled its
+    arrival rate by (``offered * terminals`` packets per switch per
+    cycle); the engines default their own ``terminals`` to it and raise
+    on an explicit mismatch, so the two can never silently disagree.
+    ``None`` (one-shot workloads) leaves the engine default of 1.
+    """
     name: str
     src: np.ndarray
     dst: np.ndarray
     gen: np.ndarray
     offered: float = 0.0        # packets / terminal / cycle
     horizon: int = 0            # generation window in cycles
+    terminals: int | None = None  # injectors/switch the rate was scaled by
 
     @property
     def num_packets(self) -> int:
         return self.src.size
+
+
+def resolve_terminals(traffic: Traffic, terminals: int | None) -> int:
+    """The engine-side injector count for ``traffic``.
+
+    ``terminals=None`` defaults to what the traffic was generated with
+    (1 when the traffic does not record it); an explicit value must
+    agree with the traffic object's record.
+    """
+    if terminals is None:
+        return traffic.terminals if traffic.terminals is not None else 1
+    if traffic.terminals is not None and terminals != traffic.terminals:
+        raise ValueError(
+            f"terminals={terminals} disagrees with the {traffic.name!r} "
+            f"traffic object, which was generated for "
+            f"terminals={traffic.terminals}; drop the explicit kwarg "
+            f"(engines default to the traffic's value) or regenerate "
+            f"the traffic")
+    return terminals
 
 
 def _random_dst_excluding_src(rng, src: np.ndarray, n: int) -> np.ndarray:
@@ -65,7 +92,8 @@ def uniform(n: int, *, offered: float, cycles: int, terminals: int = 1,
     rng = np.random.default_rng(seed)
     src, gen = _poisson_arrivals(rng, n, offered * terminals, cycles)
     dst = _random_dst_excluding_src(rng, src, n)
-    return Traffic("uniform", src, dst, gen, offered=offered, horizon=cycles)
+    return Traffic("uniform", src, dst, gen, offered=offered,
+                   horizon=cycles, terminals=terminals)
 
 
 def permutation(n: int, *, offered: float, cycles: int, terminals: int = 1,
@@ -78,7 +106,7 @@ def permutation(n: int, *, offered: float, cycles: int, terminals: int = 1,
         raise ValueError("permutation traffic needs a fixed-point-free map")
     src, gen = _poisson_arrivals(rng, n, offered * terminals, cycles)
     return Traffic("permutation", src, perm[src], gen, offered=offered,
-                   horizon=cycles)
+                   horizon=cycles, terminals=terminals)
 
 
 def hotspot(n: int, *, offered: float, cycles: int, terminals: int = 1,
@@ -96,7 +124,8 @@ def hotspot(n: int, *, offered: float, cycles: int, terminals: int = 1,
         hot = (src + shift) % n
     take_hot = (rng.random(src.size) < hot_fraction) & (hot != src)
     dst = np.where(take_hot, hot, uniform_dst)
-    return Traffic("hotspot", src, dst, gen, offered=offered, horizon=cycles)
+    return Traffic("hotspot", src, dst, gen, offered=offered,
+                   horizon=cycles, terminals=terminals)
 
 
 def adversarial_same_group(cfg: DragonflyConfig, *, offered: float,
@@ -109,7 +138,7 @@ def adversarial_same_group(cfg: DragonflyConfig, *, offered: float,
     peer_group = (src // a + 1) % g
     dst = peer_group * a + rng.integers(0, a, size=src.size)
     return Traffic("adversarial-same-group", src, dst, gen, offered=offered,
-                   horizon=cycles)
+                   horizon=cycles, terminals=terminals)
 
 
 # ---------------------------------------------------------------------------

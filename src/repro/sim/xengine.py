@@ -73,7 +73,7 @@ from .link import LinkLoadCounter, LinkTable
 from .metrics import RunStats, build_stats
 from .policies import RoutingPolicy, make_policy
 from .topology import SimTopology
-from .traffic import Traffic
+from .traffic import Traffic, resolve_terminals
 
 _I32 = jnp.int32
 _INT32_MAX = np.iinfo(np.int32).max
@@ -587,7 +587,7 @@ def _build_tables(topo: SimTopology, links: LinkTable, b: int,
 
 def sweep(topo: SimTopology, policy, traffic_factory: Callable,
           loads: Sequence[float], *, seeds: Sequence[int] = (0,),
-          terminals: int = 1, eject_bw: int | None = None,
+          terminals: int | None = None, eject_bw: int | None = None,
           num_vcs: int | None = None, queue_capacity: int = 4,
           cycles: int | None = None, warmup: int | None = None,
           drain: bool | None = None, max_cycles: int | None = None
@@ -603,9 +603,11 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     ``traffic_factory`` is called as ``factory(load, seed)`` when it
     accepts two positional arguments, else ``factory(load)`` (the oracle
     sweep's convention, reusing one packet set across seeds).  All grid
-    points share one simulated horizon (they are one program), and
-    per-point arbitration streams derive from a key over the full seed
-    tuple.
+    points share one simulated horizon (they are one program): ``cycles=``
+    pins it, otherwise it is derived from the traffic objects as the max
+    generation window over the grid.  ``terminals`` defaults to the
+    traffic objects' own record.  Per-point arbitration streams derive
+    from a key over the full seed tuple.
     """
     policy = _resolve_policy(policy)
     seeded_factory = _accepts_seed(traffic_factory)
@@ -619,6 +621,14 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     if not grid:
         return []
 
+    resolved_t = {resolve_terminals(tr, terminals) for _, _, tr in grid}
+    if len(resolved_t) > 1:
+        raise ValueError(
+            f"a batched sweep shares one injector count across the grid "
+            f"but the traffic objects record terminals="
+            f"{sorted(resolved_t)}; use one terminals value per sweep")
+    terminals = resolved_t.pop()
+
     if drain is None:
         drain = all(tr.offered == 0 for _, _, tr in grid)
     if num_vcs is None:
@@ -631,17 +641,24 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     bases = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
     packed = [_pack_traffic(tr, n, int(bases[i]))
               for i, (_, _, tr) in enumerate(grid)]
-    horizons, warmups = [], []
-    for _, _, tr in grid:
-        hor = cycles if cycles is not None else max(tr.horizon, 1)
-        horizons.append(hor)
-        warmups.append(hor // 4 if warmup is None else warmup)
-    if len(set(horizons)) != 1:
-        raise ValueError(
-            f"a batched sweep runs as one program and needs one cycle count "
-            f"shared by every (load, seed) point, got "
-            f"{sorted(set(horizons))}; pass cycles=...")
-    horizon = int(horizons[0])
+    # One program = one horizon.  cycles= pins it; otherwise take the max
+    # generation window over the grid so no point's traffic is truncated
+    # (points with shorter windows simply stop generating early).
+    if cycles is not None:
+        horizon = int(cycles)
+    else:
+        windows = {max(tr.horizon, 1) for _, _, tr in grid}
+        horizon = int(max(windows))
+        if len(windows) > 1:
+            import warnings
+            warnings.warn(
+                f"batched sweep derived a shared horizon of {horizon} "
+                f"cycles from traffic windows {sorted(windows)}; points "
+                f"with shorter generation windows are still measured over "
+                f"the shared horizon, which dilutes their accepted "
+                f"throughput — pass cycles= to pin one window",
+                stacklevel=2)
+    warmups = [horizon // 4 if warmup is None else warmup] * len(grid)
     cutoff = int(max_cycles if max_cycles is not None
                  else horizon + _DRAIN_SLACK)
     q_flat = len(grid) * n * topo.num_ports * num_vcs
@@ -716,7 +733,7 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
 
 
 def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
-                 terminals: int = 1, eject_bw: int | None = None,
+                 terminals: int | None = None, eject_bw: int | None = None,
                  num_vcs: int | None = None, queue_capacity: int = 4,
                  cycles: int | None = None, warmup: int | None = None,
                  drain: bool | None = None, max_cycles: int | None = None,

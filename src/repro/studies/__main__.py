@@ -1,0 +1,120 @@
+"""Command-line driver: ``python -m repro.studies <command>``.
+
+Commands:
+
+* ``run SPEC``   — execute a study spec (a path, or a bundled spec name)
+  and stream results to a JSONL store (default: ``<spec>.results.jsonl``
+  next to the current directory).  Re-running resumes: grid points whose
+  keys are already in the store are skipped.
+* ``show SPEC``  — print the experiments, grid sizes, and store keys a
+  spec expands to, without running anything.
+* ``specs``      — list the bundled spec files.
+
+Examples::
+
+    python -m repro.studies specs
+    python -m repro.studies run studies_smoke --backend numpy --table
+    python -m repro.studies run cin16_saturation --store knees.jsonl
+    python -m repro.studies show my_experiment.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+from . import (JsonlStore, Study, bundled_specs, load_specs,
+               resolve_spec_source)
+
+
+def _resolve_spec_arg(spec: str) -> str:
+    try:
+        return resolve_spec_source(spec)
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+
+
+def _default_store(spec_path: str) -> str:
+    stem = os.path.splitext(os.path.basename(spec_path))[0]
+    return f"{stem}.results.jsonl"
+
+
+def cmd_run(args) -> int:
+    spec_path = _resolve_spec_arg(args.spec)
+    store = args.store if args.store is not None else _default_store(spec_path)
+    study = Study(spec_path, store=JsonlStore(store),
+                  backend=args.backend)
+    print(f"study: {spec_path}")
+    print(f"store: {store}")
+    for exp in study.experiments:
+        print(f"  - {exp.describe()}")
+    t0 = time.time()
+    out = study.run(resume=not args.no_resume)
+    dt = time.time() - t0
+    print(f"ran {out.executed} grid points "
+          f"({out.restored} restored from the store) "
+          f"on backend={out.backend} in {dt:.1f}s")
+    if args.table:
+        print()
+        print(out.table())
+    print("saturation points:")
+    for name, knee in out.saturation_points().items():
+        print(f"  {name}: {knee if knee is not None else '> max load'}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    spec_path = _resolve_spec_arg(args.spec)
+    specs = load_specs(spec_path)
+    total = 0
+    for exp in specs:
+        pts = exp.points()
+        total += len(pts)
+        print(exp.describe())
+        print(f"    loads={list(exp.sweep.loads)} seeds={list(exp.sweep.seeds)}"
+              f" warmup={exp.sweep.warmup}")
+        print(f"    first key: {exp.key(*pts[0])}")
+    print(f"{len(specs)} experiments, {total} grid points")
+    return 0
+
+
+def cmd_specs(_args) -> int:
+    for name, path in bundled_specs().items():
+        n_exp = len(load_specs(path))
+        print(f"{name:<24} {n_exp:>2} experiments   {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.studies",
+        description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="execute a study spec")
+    run.add_argument("spec", help="spec file path or bundled spec name")
+    run.add_argument("--store", default=None,
+                     help="JSONL result store (default: <spec>.results.jsonl"
+                          " in the current directory)")
+    run.add_argument("--backend", default="auto",
+                     choices=["auto", "jax", "numpy"])
+    run.add_argument("--no-resume", action="store_true",
+                     help="re-run every grid point even if already stored")
+    run.add_argument("--table", action="store_true",
+                     help="print the full result table")
+    run.set_defaults(fn=cmd_run)
+
+    show = sub.add_parser("show", help="expand a spec without running")
+    show.add_argument("spec", help="spec file path or bundled spec name")
+    show.set_defaults(fn=cmd_show)
+
+    specs = sub.add_parser("specs", help="list bundled spec files")
+    specs.set_defaults(fn=cmd_specs)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+"""The ``Study`` runner: expand a spec grid, batch it, persist, resume.
+
+One :class:`Study` executes the (load x seed) grid of one or more
+:class:`~repro.studies.spec.ExperimentSpec`\\ s:
+
+* **Backend auto-selection.**  ``backend=None``/"auto" compiles each
+  experiment's grid into a single batched :func:`repro.sim.xengine.sweep`
+  program when JAX is importable, and falls back to looping the numpy
+  oracle (:func:`repro.sim.engine.simulate`) otherwise.  Same-shape
+  programs across experiments (same topology size, policy, horizon,
+  grid size) additionally share one compilation through the jit cache.
+* **Streaming persistence.**  Each finished grid point becomes a
+  :class:`~repro.studies.store.Result` appended to a JSONL store as soon
+  as it exists, so a killed study leaves a valid prefix.
+* **Resume.**  A re-run loads the store first and executes only the
+  grid points whose keys are missing; a partially-done experiment is
+  batched over just its missing points (packed by index into one
+  compiled program).  On the numpy backend resumed points are
+  bit-identical to an uninterrupted run (same per-point engine seeds);
+  on the jax backend they are statistically equivalent (the smaller
+  batch draws a different arbitration stream — the same contract the
+  compiled engine already has against the oracle).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Sequence
+
+from .spec import ExperimentSpec, load_specs
+from .store import JsonlStore, Result
+
+__all__ = ["Study", "StudyResult", "jax_available"]
+
+
+def jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - jax is a hard dep in-repo
+        return False
+
+
+def _select_backend(backend: str | None) -> str:
+    if backend in (None, "auto"):
+        return "jax" if jax_available() else "numpy"
+    if backend not in ("jax", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected 'auto', 'jax' or 'numpy'")
+    return backend
+
+
+@dataclass
+class StudyResult:
+    """Everything a finished :meth:`Study.run` produced.
+
+    ``results`` follows grid order (experiments in spec order, loads
+    major, seeds minor) and mixes freshly executed points with points
+    restored from the store (whose ``.stats`` is ``None``).
+    """
+    experiments: list[ExperimentSpec]
+    results: list[Result]
+    executed: int
+    restored: int
+    backend: str
+    store_path: str | None = None
+
+    def stats(self):
+        """In-memory RunStats per grid point (None for restored points)."""
+        return [r.stats for r in self.results]
+
+    def by_experiment(self) -> dict[str, list[Result]]:
+        out: dict[str, list[Result]] = {e.name: [] for e in self.experiments}
+        for r in self.results:
+            out.setdefault(r.experiment, []).append(r)
+        return out
+
+    def grid(self, name: str | None = None) -> list[list[Result]]:
+        """One experiment's results as the legacy ``[load][seed]`` grid."""
+        exps = {e.name: e for e in self.experiments}
+        if name is None:
+            if len(exps) != 1:
+                raise ValueError(f"study has {len(exps)} experiments; "
+                                 f"pass the name of one of {sorted(exps)}")
+            name = next(iter(exps))
+        exp = exps[name]
+        by_key = {r.key: r for r in self.results if r.experiment == name}
+        return [[by_key[exp.key(load, seed)] for seed in exp.sweep.seeds]
+                for load in exp.sweep.loads]
+
+    def saturation_points(self, threshold: float = 0.95
+                          ) -> dict[str, float | None]:
+        """Per experiment: the smallest offered load whose accepted
+        throughput (seed-averaged) falls below ``threshold * offered``."""
+        out = {}
+        for exp in self.experiments:
+            knee = None
+            for load, row in zip(exp.sweep.loads, self.grid(exp.name)):
+                acc = sum(r.accepted for r in row) / max(len(row), 1)
+                if load > 0 and acc < threshold * load:
+                    knee = load
+                    break
+            out[exp.name] = knee
+        return out
+
+    def table(self) -> str:
+        from repro.sim.report import format_table
+        return format_table(self.results)
+
+
+class Study:
+    """Run the grid of one spec file / one or more experiment specs.
+
+    ``store`` (a path or :class:`JsonlStore`) turns on persistence and
+    resume; ``backend`` is ``"auto"`` (default), ``"jax"``, or
+    ``"numpy"``.
+    """
+
+    def __init__(self, experiments, *, store=None, backend: str | None = None):
+        self.experiments: list[ExperimentSpec] = load_specs(experiments)
+        if not self.experiments:
+            raise ValueError("a Study needs at least one experiment")
+        names = [e.name for e in self.experiments]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(
+                f"experiment names must be unique within a study (they key "
+                f"the result store); duplicated: {dup}")
+        self.store = (store if isinstance(store, JsonlStore)
+                      else JsonlStore(store) if store is not None else None)
+        self.backend = backend
+        # Experiments naming the same fabric share one resolved topology
+        # (one SimTopology build, one memoized LinkTable family).
+        self._topo_cache: dict[str, object] = {}
+
+    @staticmethod
+    def _fabric_key(fs) -> str | None:
+        if fs.is_inline:
+            return None
+        return json.dumps({"kind": fs.kind, "params": fs.params},
+                          sort_keys=True, default=str)
+
+    @property
+    def grid_size(self) -> int:
+        return sum(len(e.points()) for e in self.experiments)
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, *, resume: bool = True) -> StudyResult:
+        backend = _select_backend(self.backend)
+        if self.store is not None and not resume:
+            self.store.clear()
+        existing = (self.store.load()
+                    if self.store is not None and resume else {})
+        results: list[Result] = []
+        executed = restored = 0
+        for exp in self.experiments:
+            digest = exp.digest()
+            exp_results: dict[str, Result] = {}
+            missing: list[tuple[float, int]] = []
+            for load, seed in exp.points():
+                key = exp.key(load, seed)
+                if key in existing:
+                    stored = existing[key]
+                    # The key names the grid point but not the spec's
+                    # cycles/warmup/traffic/engine parameters — restoring
+                    # a record written by a *different* version of the
+                    # spec would silently mislabel its results.
+                    if digest and stored.spec_digest and \
+                            stored.spec_digest != digest:
+                        raise ValueError(
+                            f"store {self.store.path!r} holds results for "
+                            f"{key!r} produced by a different version of "
+                            f"the experiment spec (digest "
+                            f"{stored.spec_digest} != {digest}); re-run "
+                            f"with resume=False (CLI: --no-resume) or "
+                            f"point the study at a fresh store")
+                    exp_results[key] = stored
+                    restored += 1
+                else:
+                    missing.append((load, seed))
+            if missing:
+                if backend == "jax":
+                    fresh = self._run_jax(exp, missing)
+                    if self.store is not None:
+                        self.store.append(fresh)
+                else:           # numpy streams per point inside the loop
+                    fresh = self._run_numpy(exp, missing)
+                executed += len(fresh)
+                exp_results.update((r.key, r) for r in fresh)
+            results.extend(exp_results[exp.key(load, seed)]
+                           for load, seed in exp.points())
+        return StudyResult(
+            experiments=self.experiments, results=results,
+            executed=executed, restored=restored, backend=backend,
+            store_path=self.store.path if self.store is not None else None)
+
+    def _resolve(self, exp: ExperimentSpec):
+        fs = exp.fabric
+        key = self._fabric_key(fs)
+        topo = self._topo_cache.get(key) if key is not None else None
+        if topo is None:
+            topo = fs.resolve_topology()
+            if key is not None:
+                self._topo_cache[key] = topo
+        tf = exp.traffic.factory(topo, cycles=exp.sweep.cycles,
+                                 terminals=exp.terminals
+                                 if exp.terminals is not None else 1)
+        return topo, tf
+
+    def _run_jax(self, exp: ExperimentSpec,
+                 missing: Sequence[tuple[float, int]]) -> list[Result]:
+        from repro.sim import xengine
+        topo, tf = self._resolve(exp)
+        sweep = exp.sweep
+        kw = dict(terminals=exp.terminals, cycles=sweep.cycles,
+                  warmup=sweep.warmup, **dict(exp.engine))
+        if list(missing) == exp.points():
+            # Full grid: one compiled program over loads x seeds, with the
+            # per-point arbitration streams keyed off the real seed tuple
+            # (bit-identical to the legacy xengine.sweep entry point).
+            grid = xengine.sweep(topo, exp.routing.make(), tf,
+                                 list(sweep.loads), seeds=tuple(sweep.seeds),
+                                 **kw)
+            flat = [(load, seed, grid[li][si])
+                    for li, load in enumerate(sweep.loads)
+                    for si, seed in enumerate(sweep.seeds)]
+        else:
+            # Resume: batch just the missing points into one program by
+            # packing them along the load axis (the traffic objects carry
+            # the real offered loads and seeds; the index is only a
+            # routing key).  The batch geometry differs from the full
+            # grid's, so the re-executed points draw a fresh arbitration
+            # stream — statistically equivalent, same contract as the
+            # compiled engine vs the oracle (numpy resume, by contrast,
+            # is bit-identical).  The pseudo-seed keys that stream off
+            # the actual missing points, so distinct resumes decorrelate.
+            pts = list(missing)
+            pseudo_seed = hash(tuple(pts)) & 0x7FFFFFFF
+            grid = xengine.sweep(
+                topo, exp.routing.make(),
+                lambda i, _seed: tf(*pts[int(i)]),
+                list(range(len(pts))), seeds=(pseudo_seed,), **kw)
+            flat = [(load, seed, grid[i][0])
+                    for i, (load, seed) in enumerate(pts)]
+        return [Result.from_stats(stats, key=exp.key(load, seed),
+                                  experiment=exp.name, load=load, seed=seed,
+                                  backend="jax", spec_digest=exp.digest())
+                for load, seed, stats in flat]
+
+    def _run_numpy(self, exp: ExperimentSpec,
+                   missing: Sequence[tuple[float, int]]) -> list[Result]:
+        from repro.sim.engine import simulate
+        topo, tf = self._resolve(exp)
+        sweep = exp.sweep
+        out = []
+        for load, seed in missing:
+            traffic = tf(load, seed)
+            cycles = (sweep.cycles if sweep.cycles is not None
+                      else max(traffic.horizon, 1))
+            warmup = (sweep.warmup if sweep.warmup is not None
+                      else cycles // 4)
+            stats = simulate(topo, exp.routing.make(), traffic,
+                             terminals=exp.terminals, cycles=cycles,
+                             warmup=warmup, seed=seed, backend="numpy",
+                             **dict(exp.engine))
+            res = Result.from_stats(stats, key=exp.key(load, seed),
+                                    experiment=exp.name, load=load,
+                                    seed=seed, backend="numpy",
+                                    spec_digest=exp.digest())
+            # Stream per point: a killed numpy study resumes mid-experiment.
+            if self.store is not None:
+                self.store.append(res)
+            out.append(res)
+        return out

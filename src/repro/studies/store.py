@@ -1,0 +1,173 @@
+"""Unified result records + the append-only JSONL store.
+
+Every grid point a :class:`~repro.studies.runner.Study` executes becomes
+one :class:`Result` — the serializable summary of a simulator
+:class:`~repro.sim.metrics.RunStats` plus its grid identity (experiment
+name, offered load, sweep seed, backend).  A :class:`JsonlStore` streams
+Results one JSON line at a time, so an interrupted study leaves a valid
+prefix behind and a re-run resumes by skipping the keys already present
+(:meth:`JsonlStore.load` tolerates a torn trailing line).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field, fields
+from typing import Iterable, Mapping
+
+from repro.sim.metrics import RunStats
+
+__all__ = ["Result", "JsonlStore"]
+
+
+@dataclass
+class Result:
+    """One executed grid point: identity + the RunStats summary."""
+    key: str
+    experiment: str
+    load: float
+    seed: int
+    backend: str
+    # -- RunStats summary (same fields as repro.sim.report.to_record) -------
+    topology: str
+    policy: str
+    traffic: str
+    offered: float
+    accepted: float
+    cycles: int
+    warmup: int
+    num_switches: int
+    terminals: int
+    packets_generated: int
+    packets_delivered: int
+    latency_mean: float
+    latency_p50: float
+    latency_p99: float
+    latency_max: int
+    link_util_max: float
+    link_util_mean: float
+    link_util_cv: float
+    saturated: bool
+    #: Hash of the experiment spec that produced this record (see
+    #: :meth:`repro.studies.spec.ExperimentSpec.digest`); ``""`` for
+    #: inline specs and records from older stores.
+    spec_digest: str = ""
+    #: The full in-memory stats of a freshly executed point (histograms,
+    #: raw link loads).  ``None`` for points restored from a store.
+    stats: RunStats | None = field(default=None, compare=False, repr=False)
+
+    @classmethod
+    def from_stats(cls, stats: RunStats, *, key: str, experiment: str,
+                   load: float, seed: int, backend: str,
+                   spec_digest: str = "") -> "Result":
+        return cls(
+            key=key, experiment=experiment, load=float(load), seed=int(seed),
+            backend=backend,
+            topology=stats.topology, policy=stats.policy,
+            traffic=stats.traffic, offered=float(stats.offered),
+            accepted=round(float(stats.accepted), 6),
+            cycles=int(stats.cycles), warmup=int(stats.warmup),
+            num_switches=int(stats.num_switches),
+            terminals=int(stats.terminals),
+            packets_generated=int(stats.packets_generated),
+            packets_delivered=int(stats.packets_delivered),
+            latency_mean=round(float(stats.latency_mean), 3),
+            latency_p50=float(stats.latency_p50),
+            latency_p99=float(stats.latency_p99),
+            latency_max=int(stats.latency_max),
+            link_util_max=round(float(stats.link_util_max), 4),
+            link_util_mean=round(float(stats.link_util_mean), 4),
+            link_util_cv=round(float(stats.link_util_cv), 4),
+            saturated=bool(stats.saturated),
+            spec_digest=spec_digest,
+            stats=stats)
+
+    def record(self) -> dict:
+        """The JSON-object form (everything except the in-memory stats)."""
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if f.name != "stats"}
+
+    def to_line(self) -> str:
+        return json.dumps(self.record(), sort_keys=True)
+
+    @classmethod
+    def from_record(cls, d: Mapping) -> "Result":
+        want = {f.name for f in fields(cls)} - {"stats"}
+        return cls(**{k: v for k, v in d.items() if k in want})
+
+
+class JsonlStore:
+    """Append-only JSONL persistence for :class:`Result` records."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def clear(self) -> None:
+        """Drop every stored record (a ``resume=False`` run starts clean —
+        appending duplicates would shadow older records on load)."""
+        if self.exists():
+            os.remove(self.path)
+
+    def load(self) -> dict[str, Result]:
+        """Stored results keyed by grid-point key.
+
+        A torn trailing line (the study was killed mid-write) is skipped;
+        a corrupt line anywhere else raises, since silently dropping it
+        would silently re-run (and duplicate) its grid point.
+        """
+        out: dict[str, Result] = {}
+        if not self.exists():
+            return out
+        with open(self.path) as f:
+            text = f.read()
+        lines = text.split("\n")
+        # A torn tail can only be the final fragment of a file that was
+        # killed mid-write, i.e. one missing its trailing newline; a
+        # newline-terminated corrupt record is a real error.
+        torn = len(lines) - 1 if text and not text.endswith("\n") else None
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = Result.from_record(json.loads(line))
+            except (json.JSONDecodeError, TypeError) as e:
+                if i == torn:
+                    break
+                raise ValueError(
+                    f"{self.path}:{i + 1}: corrupt result line ({e}); "
+                    f"remove or repair the store to resume") from e
+            out[rec.key] = rec
+        return out
+
+    def append(self, results: Iterable[Result] | Result) -> None:
+        """Append records and flush — each line is durable on its own."""
+        if isinstance(results, Result):
+            results = [results]
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        # An unterminated tail (killed mid-write) must not swallow the
+        # next record.  Mirror load()'s tolerance exactly: a tail that
+        # parses as a complete record was *restored*, so terminate it in
+        # place; an unparseable fragment was ignored, so truncate it.
+        if self.exists() and os.path.getsize(self.path) > 0:
+            with open(self.path, "rb+") as f:
+                f.seek(-1, os.SEEK_END)
+                if f.read(1) != b"\n":
+                    f.seek(0)
+                    data = f.read()
+                    keep = data.rfind(b"\n") + 1
+                    try:
+                        Result.from_record(json.loads(data[keep:]))
+                    except (json.JSONDecodeError, TypeError,
+                            UnicodeDecodeError):
+                        f.truncate(keep)
+                    else:
+                        f.write(b"\n")
+        with open(self.path, "a") as f:
+            for r in results:
+                f.write(r.to_line() + "\n")
+            f.flush()
+            os.fsync(f.fileno())

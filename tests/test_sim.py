@@ -140,10 +140,19 @@ WARMUP = 300
 
 
 def _sweep(policy_name, traffic_factory, loads, seed):
-    topo = sim.cin_topology("xor", N16)
-    return sim.saturation_sweep(
-        topo, lambda: sim.make_policy(policy_name), traffic_factory,
-        loads, terminals=T, cycles=CYCLES, warmup=WARMUP, seed=seed)
+    """One offered-load sweep through the repro.studies surface (the
+    replacement for the deprecated report.saturation_sweep), on the
+    numpy oracle engine."""
+    from repro import studies
+    spec = studies.ExperimentSpec(
+        fabric=studies.FabricSpec("cin", {"instance": "xor", "n": N16}),
+        traffic=studies.TrafficSpec.custom(traffic_factory),
+        routing=studies.RoutingSpec(policy_name),
+        sweep=studies.SweepSpec(loads=tuple(loads), seeds=(seed,),
+                                cycles=CYCLES, warmup=WARMUP),
+        terminals=T)
+    out = studies.Study(spec, backend="numpy").run()
+    return [row[0].stats for row in out.grid()]
 
 
 def test_uniform_sweep_minimal_saturates_later_than_valiant():

@@ -188,6 +188,8 @@ def test_batched_sweep_matches_pointwise_runs():
 
 
 def test_fabric_sim_sweep_backends_agree():
+    """The deprecated Fabric.sim_sweep shim still works on both backends
+    (it routes through repro.studies.Study internally)."""
     fab = make_fabric("xor", 16)
 
     def tf(load, seed):
@@ -195,22 +197,35 @@ def test_fabric_sim_sweep_backends_agree():
                            seed=seed)
 
     kw = dict(seeds=(4,), terminals=T, cycles=CYCLES, warmup=WARMUP)
-    jx = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="jax", **kw)
-    np_ = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="numpy", **kw)
+    from repro.fabric import LacinDeprecationWarning
+    with pytest.warns(LacinDeprecationWarning):
+        jx = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="jax", **kw)
+    with pytest.warns(LacinDeprecationWarning):
+        np_ = fab.sim_sweep("minimal", tf, [0.4, 0.8], backend="numpy", **kw)
     for row_jx, row_np in zip(jx, np_):
         assert row_jx[0].accepted == pytest.approx(row_np[0].accepted,
                                                    rel=0.12, abs=0.02)
 
 
-def test_sweep_rejects_mixed_horizons():
+def test_sweep_derives_shared_horizon_from_traffic():
+    """cycles=None on a batched sweep: the shared horizon is the max
+    generation window over the grid (no ValueError, no explicit cycles)."""
     topo = sim.cin_topology("xor", 8)
 
     def tf(load):
         return sim.uniform(8, offered=load, cycles=100 + int(load * 100),
                            terminals=2, seed=0)
 
-    with pytest.raises(ValueError, match="one cycle count"):
-        xengine.sweep(topo, "minimal", tf, [0.1, 0.9], terminals=2)
+    with pytest.warns(UserWarning, match="shared horizon"):
+        grid = xengine.sweep(topo, "minimal", tf, [0.1, 0.9], terminals=2)
+    assert [row[0].cycles for row in grid] == [190, 190]
+    assert [row[0].warmup for row in grid] == [190 // 4] * 2
+    # sanity: the derived-horizon run matches the same sweep pinned
+    # explicitly to that horizon
+    pinned = xengine.sweep(topo, "minimal", tf, [0.1, 0.9], terminals=2,
+                           cycles=190)
+    for a, b in zip(grid, pinned):
+        assert a[0].accepted == b[0].accepted
 
 
 def test_saturation_sweep_backend_switch():
@@ -220,9 +235,11 @@ def test_saturation_sweep_backend_switch():
         return sim.uniform(8, offered=load, cycles=CYCLES, terminals=4,
                            seed=9)
 
-    stats = sim.saturation_sweep(topo, sim.MinimalPolicy, tf, [0.2, 0.6],
-                                 terminals=4, cycles=CYCLES, warmup=WARMUP,
-                                 backend="jax")
+    from repro.fabric import LacinDeprecationWarning
+    with pytest.warns(LacinDeprecationWarning):
+        stats = sim.saturation_sweep(topo, sim.MinimalPolicy, tf, [0.2, 0.6],
+                                     terminals=4, cycles=CYCLES,
+                                     warmup=WARMUP, backend="jax")
     assert [s.offered for s in stats] == [0.2, 0.6]
     assert all(0 < s.accepted <= 1.2 for s in stats)
 
