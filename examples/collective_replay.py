@@ -1,0 +1,93 @@
+"""Collective replay demo: predicted vs measured schedule completion.
+
+The paper's §2 claim is that isoport LACIN wiring makes every 1-factor
+schedule step contention-free, so a stepwise all-to-all completes in
+exactly ``num_steps x message_size`` link cycles.  This demo *measures*
+that: it converts each fabric's own collective schedule into a
+phase-barriered workload (:mod:`repro.sim.workloads`) and replays it
+through the packet simulator — queueing, credits, and VCs in the loop —
+printing measured completion against the contention-free bound and the
+per-phase breakdown.
+
+Expected output: the CIN and HyperX all-to-all replays meet the bound
+exactly (ratio 1.00) under minimal routing; the Dragonfly replay's
+global phases serialize ``group_size`` flows over each single global
+link (ratio ~a/h'ish), which is precisely the locality the two-level
+all-reduce sequence (``--collective all_reduce``) is shaped to avoid.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python examples/collective_replay.py
+    PYTHONPATH=src python examples/collective_replay.py --fabric hyperx \
+        --message-size 4 --backend jax
+    PYTHONPATH=src python examples/collective_replay.py --fabric dragonfly \
+        --collective all_reduce --policies minimal,valiant
+    PYTHONPATH=src python examples/collective_replay.py --phases
+
+The same comparison, declaratively (persisted + resumable):
+
+    PYTHONPATH=src python -m repro.studies run collective_replay
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.fabric import make_fabric
+from repro.sim import workloads
+
+
+def build_fabrics(which: str):
+    fabs = {
+        "cin": make_fabric("xor", 16),
+        "hyperx": make_fabric(HyperXConfig(dims=(8, 8), terminals=4)),
+        "dragonfly": make_fabric(DragonflyConfig(
+            group_size=4, terminals_per_switch=2,
+            global_ports_per_switch=2, num_groups=8)),
+    }
+    return list(fabs.values()) if which == "all" else [fabs[which]]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fabric", default="all",
+                    choices=["all", "cin", "hyperx", "dragonfly"])
+    ap.add_argument("--collective", default="all_to_all",
+                    choices=["all_to_all", "all_reduce"])
+    ap.add_argument("--message-size", type=int, default=2)
+    ap.add_argument("--policies", default="minimal,adaptive",
+                    help="comma-separated routing policies to compare")
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "jax"])
+    ap.add_argument("--phases", action="store_true",
+                    help="print the per-phase cycle breakdown")
+    args = ap.parse_args(argv)
+
+    policies = args.policies.split(",")
+    hdr = (f"{'fabric':<22} {'policy':<10} {'phases':>6} {'ideal':>6} "
+           f"{'measured':>9} {'ratio':>6}")
+    print(f"collective={args.collective} message_size={args.message_size} "
+          f"backend={args.backend}")
+    print(hdr)
+    print("-" * len(hdr))
+    for fab in build_fabrics(args.fabric):
+        w = workloads.collective_workload(fab, args.collective,
+                                          message_size=args.message_size)
+        for policy in policies:
+            stats = workloads.replay(fab.sim_topology(), policy, w,
+                                     backend=args.backend)
+            ratio = stats.completion_cycles / max(stats.ideal_cycles, 1)
+            print(f"{fab.name:<22} {policy:<10} {w.num_phases:>6} "
+                  f"{stats.ideal_cycles:>6} {stats.completion_cycles:>9} "
+                  f"{ratio:>6.2f}")
+            if args.phases:
+                print(f"    phase cycles: {list(stats.phase_cycles)}")
+    print()
+    print("ratio 1.00 = the schedule ran contention-free under queueing "
+          "(the paper's isoport claim); above 1.00 = measured "
+          "serialization the schedule algebra cannot see.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

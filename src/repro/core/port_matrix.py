@@ -129,7 +129,20 @@ def xor_matrix(n: int) -> np.ndarray:
 
 def port_matrix(instance: str, n: int) -> np.ndarray:
     """P matrix of any registered CIN instance (resolved via the
-    :mod:`repro.fabric` registry)."""
+    :mod:`repro.fabric` registry).
+
+    ``P[s, i]`` is the switch that port ``i`` of switch ``s`` links to;
+    for isoport instances the far end uses the *same* port index — the
+    paper's cabling discipline:
+
+    >>> port_matrix("xor", 4)
+    array([[1, 2, 3],
+           [0, 3, 2],
+           [3, 0, 1],
+           [2, 1, 0]])
+    >>> int(port_matrix("xor", 4)[port_matrix("xor", 4)[1, 2], 2])
+    1
+    """
     from repro.fabric.registry import get_instance
     return get_instance(instance).matrix(n)
 

@@ -93,7 +93,17 @@ def route_circle_closed(a, b, n):
 
 
 def route(instance: str, a, b, n: int):
-    """Routing for any registered CIN instance (via :mod:`repro.fabric`)."""
+    """Routing for any registered CIN instance (via :mod:`repro.fabric`):
+    the port used at ``a`` to reach ``b``, computed table-free (§3).
+
+    Routing is the inverse of the P matrix in the port argument:
+
+    >>> int(route("xor", 5, 3, 8))        # 5 ^ 3 = 6 -> port 6 - 1
+    5
+    >>> from repro.core.port_matrix import port_matrix
+    >>> int(port_matrix("xor", 8)[5, route("xor", 5, 3, 8)])
+    3
+    """
     from repro.fabric.registry import get_instance
     return get_instance(instance).route(a, b, n)
 

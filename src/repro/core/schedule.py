@@ -120,6 +120,19 @@ def make_schedule(instance: str, n: int) -> LacinSchedule:
 
     ``instance='auto'`` picks XOR when n is a power of two (simplest
     routing, Table 1) else Circle (defined for any n).
+
+    Every isoport schedule is a 1-factorization read as steps — N-1
+    matchings covering all pairs, each step contention-free:
+
+    >>> s = make_schedule("auto", 8)
+    >>> s.instance, s.num_steps
+    ('xor', 7)
+    >>> s.is_matching_per_step() and s.is_contention_free()
+    True
+    >>> s.covers_all_pairs()
+    True
+    >>> s.partners(0).tolist()            # step 0 = 1-factor 0: s ^ 1
+    [1, 0, 3, 2, 5, 4, 7, 6]
     """
     if instance == "auto":
         instance = "xor" if is_power_of_two(n) else "circle"

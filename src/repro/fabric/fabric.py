@@ -14,6 +14,7 @@ CINs (§5/Fig. 3).  :class:`CINFabric`, :class:`HyperXFabric` and
 ``deployment()``        physical arithmetic (racks / hoses / colours)
 ``verify()``            structural report with an ``"ok"`` verdict
 ``collectives(mesh)``   mesh-aware LACIN collectives, shape-checked
+``replay(collective)``  packet-simulate the fabric's own schedule steps
 ======================  ====================================================
 
 ``make_fabric`` dispatches: a registered instance name + size -> CIN, a
@@ -103,6 +104,27 @@ class Fabric(abc.ABC):
             terminals=terminals, engine=dict(sim_kw))
         out = Study(spec, backend=backend).run()
         return [[r.stats for r in row] for row in out.grid()]
+
+    def replay(self, collective: str = "all_to_all", *,
+               message_size: int = 1, policy="minimal",
+               backend: str = "numpy", seed: int = 0, **engine_kw):
+        """Replay one of this fabric's own collective schedules through
+        the packet simulator (:mod:`repro.sim.workloads`).
+
+        ``collective`` is ``"all_to_all"`` or ``"all_reduce"`` — the
+        step sequence is the one :meth:`schedule` /
+        :mod:`repro.fabric.collectives` would execute on this fabric.
+        Returns :class:`~repro.sim.metrics.RunStats` with the replay
+        fields set (``phase_cycles`` / ``completion_cycles`` /
+        ``ideal_cycles``), so ``stats.completion_cycles ==
+        stats.ideal_cycles`` *is* the paper's contention-freedom claim,
+        measured under queueing.
+        """
+        from repro.sim.workloads import collective_workload
+        from repro.sim.workloads import replay as replay_workload
+        w = collective_workload(self, collective, message_size=message_size)
+        return replay_workload(self.sim_topology(), policy, w,
+                               backend=backend, seed=seed, **engine_kw)
 
     @abc.abstractmethod
     def link_loads(self, traffic="uniform") -> dict:

@@ -22,6 +22,14 @@ seeds x policies, persisted and resumable — describe a
 :class:`repro.studies.Study`; the sweep helpers here
 (``saturation_sweep``/``compare_policies``) are deprecated shims over
 that API.
+
+Beyond open-loop synthetic traffic, :mod:`repro.sim.workloads` replays
+the repo's *own* LACIN collective schedules — phase-barriered closed
+workloads — through either engine, measuring completion against the
+schedule algebra's contention-free bound::
+
+    stats = fabric.make_fabric("xor", 16).replay("all_to_all")
+    assert stats.completion_cycles == stats.ideal_cycles
 """
 from .topology import (SimTopology, cin_topology, dragonfly_topology,
                        hyperx_topology, routed_link_loads)
@@ -36,5 +44,6 @@ from .engine import Engine, simulate
 from .metrics import RunStats, latency_summary
 from .report import (compare_policies, format_table, saturation_point,
                      saturation_sweep, save_json, to_record)
+from .workloads import Phase, Workload, collective_workload, replay
 from . import xengine
 from .xengine import simulate_jax, sweep as sim_sweep

@@ -27,7 +27,8 @@ from __future__ import annotations
 import numpy as np
 
 from .link import LinkLoadCounter, LinkTable
-from .metrics import RunStats, build_stats
+from .metrics import (RunStats, attach_replay, build_stats,
+                      replay_timeline)
 from .policies import RoutingPolicy
 from .switch import QueueFabric, arbitrate
 from .topology import SimTopology
@@ -103,10 +104,32 @@ class Engine:
         self.delivered_in_window = 0
         self.cycle = 0
         self.warmup = 0
+
+        # -- collective-replay phase barrier --------------------------------
+        # For workload replays (traffic.workload set) gen holds each
+        # packet's phase ordinal; a phase's packets become injection
+        # candidates only once every earlier phase has fully delivered.
+        # phase_done[k] records the cycle phase k's last packet ejected.
+        if traffic.workload is not None:
+            num_phases = traffic.workload.num_phases
+            self.phase_cum = traffic.workload.phase_cum(num_phases)
+            self.phase_done = np.full(num_phases, -1, dtype=np.int64)
+            self.cur_phase = 0
+            self._advance_barrier(0)         # release empty leading phases
+        else:
+            self.phase_cum = None
         # Measurement window is [warmup, meas_end): drain cycles past the
         # open-loop horizon deliver backlog without fresh offered load, so
         # counting them would inflate accepted throughput past offered.
         self.meas_end = float("inf")
+
+    def _advance_barrier(self, c: int) -> None:
+        """Open the next phase barrier(s) whose packets are all delivered,
+        recording the completion cycle (empty phases complete in place)."""
+        while (self.cur_phase < self.phase_cum.size
+               and self.delivered_total >= self.phase_cum[self.cur_phase]):
+            self.phase_done[self.cur_phase] = c
+            self.cur_phase += 1
 
     # -- congestion view for adaptive policies ------------------------------
     def port_backlog(self, switch: np.ndarray, port: np.ndarray) -> np.ndarray:
@@ -142,6 +165,11 @@ class Engine:
             self.delivered_total += win.size
             if self.warmup <= c < self.meas_end:
                 self.delivered_in_window += win.size
+            if self.phase_cum is not None:
+                # Barrier opens in the same cycle the closing delivery
+                # lands, so the next phase's injection (stage 3 below)
+                # never loses a cycle to the bookkeeping.
+                self._advance_barrier(c)
 
         # 2. transit requests ---------------------------------------------
         tq = aq[~done]
@@ -159,7 +187,10 @@ class Engine:
         valid = idx < self.blk_end[self.term_switch]
         if self.gen.size:
             safe = np.where(valid, idx, 0)
-            valid &= self.gen[safe] <= c
+            # Replays gate on the released phase (gen = phase ordinal);
+            # open-loop traffic gates on simulated time (gen = cycle).
+            limit = c if self.phase_cum is None else self.cur_phase
+            valid &= self.gen[safe] <= limit
         cand_term = np.nonzero(valid)[0]
         ip = idx[cand_term]
         if ip.size:
@@ -227,7 +258,9 @@ class Engine:
             drain = self.traffic.offered == 0
         cutoff = max_cycles if max_cycles is not None else horizon + _DRAIN_SLACK
         self.warmup = warmup
-        self.meas_end = horizon
+        # Replays measure the whole run: the "horizon" is only the phase
+        # count, and every delivery belongs to the workload being timed.
+        self.meas_end = horizon if self.phase_cum is None else float("inf")
 
         while self.cycle < horizon:
             if self.cycle == warmup:
@@ -240,6 +273,21 @@ class Engine:
                 f"{self.topo.name}/{self.policy.name}: "
                 f"{m - self.delivered_total} packets undelivered after "
                 f"{self.cycle} cycles (deadlock or cutoff too small)")
+        if self.phase_cum is not None:
+            # Summary stats over the *replay's* timeline: the run spans
+            # [0, completion], and a packet's reference time is the cycle
+            # its phase barrier opened (gen holds the phase ordinal), so
+            # latency measures in-phase queueing + flight, and accepted /
+            # utilization normalize by the measured completion.
+            cycles_arg, gen_arg = replay_timeline(self.phase_done, self.gen)
+            stats = build_stats(
+                topology=self.topo, policy=self.policy, traffic=self.traffic,
+                cycles=cycles_arg, warmup=warmup, terminals=self.terminals,
+                gen=gen_arg, deliver=self.deliver, link_counter=self.load,
+                delivered_in_window=self.delivered_in_window,
+                in_flight=self.fabric.total_occupancy)
+            return attach_replay(stats, self.traffic.workload,
+                                 self.phase_done)
         return build_stats(
             topology=self.topo, policy=self.policy, traffic=self.traffic,
             cycles=max(horizon, 1), warmup=warmup, terminals=self.terminals,

@@ -39,6 +39,14 @@ class RunStats:
     link_util_mean: float = 0.0
     link_util_cv: float = 0.0
     in_flight_at_end: int = 0
+    # -- collective-replay fields (repro.sim.workloads); None elsewhere -----
+    #: Per-phase durations in cycles (barrier-to-barrier).
+    phase_cycles: tuple | None = None
+    #: Cycle at which the workload's last packet delivered.
+    completion_cycles: int | None = None
+    #: The schedule algebra's contention-free lower bound
+    #: (:attr:`repro.sim.workloads.Workload.ideal_cycles`).
+    ideal_cycles: int | None = None
 
     @property
     def delivery_fraction(self) -> float:
@@ -63,6 +71,36 @@ def latency_summary(lat: np.ndarray) -> dict:
         "max": int(lat.max()),
         "histogram": hist,
     }
+
+
+def replay_timeline(phase_done, gen) -> tuple[int, np.ndarray]:
+    """The replay measurement frame for :func:`build_stats`:
+    ``(completion horizon, per-packet release cycles)``.
+
+    A replay's packets are "generated" the cycle their phase barrier
+    opens (phase ``k`` releases when phase ``k-1`` completes), so
+    latency = deliver − release measures in-phase queueing + flight, and
+    the run's measurement horizon is the completion cycle — not the
+    phase count ``gen`` (a phase *ordinal*) would suggest.
+    """
+    done = np.asarray(phase_done, dtype=np.int64)
+    completion = int(done[-1]) if done.size else 0
+    release = (np.concatenate([[0], done[:-1]]) if done.size
+               else np.zeros(1, dtype=np.int64))
+    gen = np.asarray(gen, dtype=np.int64)
+    return max(completion, 1), (release[gen] if gen.size else gen)
+
+
+def attach_replay(stats: RunStats, workload, phase_done) -> RunStats:
+    """Fill the collective-replay fields from the engine's per-phase
+    completion record (``phase_done[k]`` = the cycle phase ``k``'s last
+    packet delivered)."""
+    done = np.asarray(phase_done, dtype=np.int64)
+    starts = np.concatenate([[0], done[:-1]]) if done.size else done
+    stats.phase_cycles = tuple(int(d - s) for s, d in zip(starts, done))
+    stats.completion_cycles = int(done[-1]) if done.size else 0
+    stats.ideal_cycles = int(workload.ideal_cycles)
+    return stats
 
 
 def build_stats(*, topology, policy, traffic, cycles, warmup, terminals,

@@ -71,7 +71,17 @@ def saturation_sweep(topo: SimTopology,
 def saturation_point(stats: Sequence[RunStats], *, threshold: float = 0.95
                      ) -> float | None:
     """Smallest offered load whose accepted throughput falls below
-    ``threshold * offered`` — ``None`` if the sweep never saturates."""
+    ``threshold * offered`` — ``None`` if the sweep never saturates.
+
+    ``threshold`` is the accepted/offered fraction below which a point
+    counts as saturated: 0.95 (the interconnect literature's knee
+    convention) tolerates up to 5% shortfall as sampling noise on
+    uncongested points while flagging the load where queueing starts
+    rejecting offered traffic.  Raise it toward 1.0 for long-horizon
+    runs with tight confidence intervals; lower it to ignore mild
+    congestion.  Points are scanned in increasing offered-load order
+    regardless of input order.
+    """
     for s in sorted(stats, key=lambda s: s.offered):
         if s.offered > 0 and s.accepted < threshold * s.offered:
             return s.offered

@@ -38,7 +38,14 @@ class Traffic:
     arrival rate by (``offered * terminals`` packets per switch per
     cycle); the engines default their own ``terminals`` to it and raise
     on an explicit mismatch, so the two can never silently disagree.
-    ``None`` (one-shot workloads) leaves the engine default of 1.
+    ``None`` (one-shot workloads without an explicit ``terminals=``)
+    leaves the engine default of 1.
+
+    ``workload`` marks a phase-structured collective replay
+    (:class:`repro.sim.workloads.Workload`): ``gen`` then holds each
+    packet's *phase ordinal* — the barrier it waits behind — rather
+    than a generation cycle, and the engines gate injection on phase
+    completion instead of simulated time.
     """
     name: str
     src: np.ndarray
@@ -47,6 +54,7 @@ class Traffic:
     offered: float = 0.0        # packets / terminal / cycle
     horizon: int = 0            # generation window in cycles
     terminals: int | None = None  # injectors/switch the rate was scaled by
+    workload: object | None = None  # repro.sim.workloads.Workload for replays
 
     @property
     def num_packets(self) -> int:
@@ -145,24 +153,35 @@ def adversarial_same_group(cfg: DragonflyConfig, *, offered: float,
 # One-shot (closed) workloads for validation.
 # ---------------------------------------------------------------------------
 
-def one_shot_all_to_all(n: int) -> Traffic:
+def one_shot_all_to_all(n: int, *, terminals: int | None = None) -> Traffic:
     """One packet per ordered switch pair, all generated at cycle 0 — the
     workload whose link loads :func:`repro.core.simulate.cin_link_loads`
-    counts in closed form."""
+    counts in closed form.
+
+    ``terminals`` is recorded on the traffic object exactly like the
+    open-loop generators record theirs (:func:`resolve_terminals`): the
+    engines then default to it and raise on an explicit mismatch.
+    ``None`` keeps the legacy behaviour (engine default of 1, any
+    explicit value accepted).
+    """
     a = np.repeat(np.arange(n), n)
     b = np.tile(np.arange(n), n)
     keep = a != b
     return Traffic("one-shot-a2a", a[keep].astype(np.int64),
                    b[keep].astype(np.int64),
-                   np.zeros(int(keep.sum()), dtype=np.int64), horizon=1)
+                   np.zeros(int(keep.sum()), dtype=np.int64), horizon=1,
+                   terminals=terminals)
 
 
-def one_shot_permutation(partners: np.ndarray) -> Traffic:
+def one_shot_permutation(partners: np.ndarray, *,
+                         terminals: int | None = None) -> Traffic:
     """One packet per switch to ``partners[s]`` (self/negative = idle) — a
-    single step of a 1-factor schedule."""
+    single step of a 1-factor schedule.  ``terminals`` is recorded the
+    same way as :func:`one_shot_all_to_all`'s."""
     partners = np.asarray(partners)
     s = np.arange(partners.size)
     keep = (partners >= 0) & (partners != s)
     return Traffic("one-shot-perm", s[keep].astype(np.int64),
                    partners[keep].astype(np.int64),
-                   np.zeros(int(keep.sum()), dtype=np.int64), horizon=1)
+                   np.zeros(int(keep.sum()), dtype=np.int64), horizon=1,
+                   terminals=terminals)

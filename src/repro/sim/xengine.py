@@ -70,7 +70,8 @@ from jax import lax
 
 from .engine import _DRAIN_SLACK
 from .link import LinkLoadCounter, LinkTable
-from .metrics import RunStats, build_stats
+from .metrics import (RunStats, attach_replay, build_stats,
+                      replay_timeline)
 from .policies import RoutingPolicy, make_policy
 from .topology import SimTopology
 from .traffic import Traffic, resolve_terminals
@@ -113,6 +114,11 @@ class XSpec(NamedTuple):
     horizon: int
     cutoff: int
     log_deliveries: bool
+    #: Collective-replay mode: > 0 enables the phase barrier — packet
+    #: ``gen`` is a phase ordinal, injection gates on completed phases,
+    #: and ``phase_done`` windows (one static (B, num_phases) record)
+    #: capture each phase's completion cycle.  0 = open-loop traffic.
+    num_phases: int = 0
 
 
 class _Tables(NamedTuple):
@@ -173,6 +179,7 @@ class _State(NamedTuple):
     load_window: jax.Array       # (L,) traversals inside [warmup, horizon)
     delivered_total: jax.Array   # (B,)
     delivered_win: jax.Array     # (B,)
+    phase_done: jax.Array        # (B, num_phases) completion cycle, -1
     cycle: jax.Array             # scalar, shared by every copy
 
 
@@ -266,7 +273,12 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
         rand_bits = min(30 - x_bits, 16)
     src, dst, gen = pkt["src"], pkt["dst"], pkt["gen"]
     c = state.cycle
-    in_window = (c >= warmup) & (c < spec.horizon)   # (B,) per-copy mask
+    if spec.num_phases:
+        # Replays measure the whole run (the horizon is only the phase
+        # count); the window upper bound applies to open-loop drains.
+        in_window = c >= warmup                      # (B,) per-copy mask
+    else:
+        in_window = (c >= warmup) & (c < spec.horizon)
     # One random word per queue lane and per terminal lane; mechanisms
     # consume disjoint bit ranges of a word (threefry bits are
     # independent), halving the per-cycle threefry work.
@@ -334,6 +346,21 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
     delivered_total = state.delivered_total + ej_cnt
     delivered_win = state.delivered_win + jnp.where(in_window, ej_cnt, 0)
 
+    # -- phase barrier (collective replay) ---------------------------------
+    # cur_phase[b] = completed phases of copy b, derived from the
+    # post-ejection delivered count against the per-copy cumulative phase
+    # sizes — the same-cycle release discipline of the oracle engine
+    # (a phase's closing delivery unblocks the next phase's injection in
+    # this very cycle).  phase_done records each phase's closing cycle.
+    if spec.num_phases:
+        cum = pkt["phase_cum"]                      # (B, num_phases)
+        done_p = delivered_total[:, None] >= cum
+        phase_done = jnp.where((state.phase_done < 0) & done_p, c,
+                               state.phase_done)
+        cur_phase = jnp.sum(done_p, axis=1).astype(_I32)   # (B,)
+    else:
+        phase_done = state.phase_done
+
     # 2. transit requests --------------------------------------------------
     transit = valid & ~done
     sw_q = tables.sw_local
@@ -346,7 +373,12 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
             + state.term_next * t)
     inj_valid = cand < pkt["blk_end"][tables.blk_idx]
     ip = jnp.where(inj_valid, cand, 0)
-    inj_valid &= gen[ip] <= c
+    if spec.num_phases:
+        # Replay: gen is the packet's phase ordinal; it may inject once
+        # its copy has completed that many phases.
+        inj_valid &= gen[ip] <= cur_phase[tables.copybase_of_term // (n * p)]
+    else:
+        inj_valid &= gen[ip] <= c
 
     i_mid, i_phase = dst[ip], jnp.ones(nt_flat, _I32)
     if spec.policy != "minimal" and n >= 3:
@@ -483,7 +515,8 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
                   ej_log=ej_log, term_next=term_next, pressure=pressure,
                   load_total=load_total, load_window=load_window,
                   delivered_total=delivered_total,
-                  delivered_win=delivered_win, cycle=c + 1)
+                  delivered_win=delivered_win, phase_done=phase_done,
+                  cycle=c + 1)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -506,6 +539,7 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         load_window=jnp.zeros(b * n * p, _I32),
         delivered_total=jnp.zeros(b, _I32),
         delivered_win=jnp.zeros(b, _I32),
+        phase_done=jnp.full((b, spec.num_phases), -1, _I32),
         cycle=jnp.zeros((), _I32),
     )
 
@@ -533,6 +567,7 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         "load_window": final.load_window,
         "delivered_total": final.delivered_total,
         "delivered_in_window": final.delivered_win,
+        "phase_done": final.phase_done,
         "cycle": final.cycle,
         "in_flight": final.occ.reshape(b, n * p * v).sum(axis=1),
     }
@@ -629,6 +664,18 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
             f"{sorted(resolved_t)}; use one terminals value per sweep")
     terminals = resolved_t.pop()
 
+    # Collective replays (traffic.workload set) compile the phase barrier
+    # into the program: all-or-none across the grid (the barrier changes
+    # the injection gate's meaning), one static phase-window count.
+    wls = [tr.workload for _, _, tr in grid]
+    replaying = any(w is not None for w in wls)
+    if replaying and not all(w is not None for w in wls):
+        raise ValueError("a batched sweep cannot mix collective-replay "
+                         "workloads with open-loop traffic")
+    num_phases = max((w.num_phases for w in wls), default=0) if replaying \
+        else 0
+    replaying = num_phases > 0
+
     if drain is None:
         drain = all(tr.offered == 0 for _, _, tr in grid)
     if num_vcs is None:
@@ -658,7 +705,8 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
                 f"the shared horizon, which dilutes their accepted "
                 f"throughput — pass cycles= to pin one window",
                 stacklevel=2)
-    warmups = [horizon // 4 if warmup is None else warmup] * len(grid)
+    default_warmup = 0 if replaying else horizon // 4
+    warmups = [default_warmup if warmup is None else warmup] * len(grid)
     cutoff = int(max_cycles if max_cycles is not None
                  else horizon + _DRAIN_SLACK)
     q_flat = len(grid) * n * topo.num_ports * num_vcs
@@ -672,7 +720,7 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         threshold=float(getattr(policy, "threshold", 0.0)),
         weight=float(getattr(policy, "weight", 0.0)),
         alpha=0.05, drain=bool(drain), horizon=horizon, cutoff=cutoff,
-        log_deliveries=log_deliveries)
+        log_deliveries=log_deliveries, num_phases=num_phases)
 
     links = LinkTable.for_topology(topo, num_vcs)
     tables = _build_tables(topo, links, len(grid), terminals, num_vcs)
@@ -687,6 +735,11 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         flat_np["src"] = np.zeros(1, np.int32)
         flat_np["dst"] = np.full(1, min(1, n - 1), np.int32)
         flat_np["gen"] = np.full(1, _PAD_GEN, np.int32)
+    if replaying:
+        # Per-copy cumulative phase sizes, padded to the shared static
+        # phase count (padding phases are empty and complete instantly).
+        flat_np["phase_cum"] = np.stack(
+            [w.phase_cum(num_phases) for w in wls]).astype(np.int32)
     flat = {k: jnp.asarray(a) for k, a in flat_np.items()}
     key = jax.random.PRNGKey(hash(tuple(s for _, s, _ in grid)) & 0x7FFFFFFF)
     out = _run_flat(spec, tables, flat, key, jnp.asarray(warmups, _I32))
@@ -720,14 +773,25 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         counter.window = out["load_window"][
             i * n_links:(i + 1) * n_links].astype(np.int64)
         deliver = deliver_all[int(bases[i]):int(bases[i]) + m]
-        results.append(build_stats(
+        gen_arg = packed[i]["gen"][:m].astype(np.int64)
+        cycles_arg = max(horizon, 1)
+        if replaying:
+            # Measure over the replay's own timeline (see
+            # metrics.replay_timeline): horizon = completion cycle,
+            # generation = the cycle each packet's phase released.
+            pd = out["phase_done"][i, :wls[i].num_phases]
+            cycles_arg, gen_arg = replay_timeline(pd, gen_arg)
+        stats = build_stats(
             topology=topo, policy=policy, traffic=tr,
-            cycles=max(horizon, 1), warmup=int(warmups[i]),
-            terminals=terminals,
-            gen=packed[i]["gen"][:m].astype(np.int64),
+            cycles=cycles_arg, warmup=int(warmups[i]),
+            terminals=terminals, gen=gen_arg,
             deliver=deliver, link_counter=counter,
             delivered_in_window=int(out["delivered_in_window"][i]),
-            in_flight=int(out["in_flight"][i])))
+            in_flight=int(out["in_flight"][i]))
+        if replaying:
+            attach_replay(stats, wls[i],
+                          out["phase_done"][i, :wls[i].num_phases])
+        results.append(stats)
     return [results[li * len(seeds):(li + 1) * len(seeds)]
             for li in range(len(loads))]
 

@@ -29,8 +29,9 @@ The same experiment as a file::
     python -m repro.studies run sweep_spec.json
 
 Bundled specs under ``repro/studies/specs/`` reproduce the paper's
-CIN-16 / HyperX-256 / Dragonfly-72 sweeps; ``python -m repro.studies
-specs`` lists them.  The legacy entry points
+CIN-16 / HyperX-256 / Dragonfly-72 sweeps and the ``collective_replay``
+schedule-vs-bound comparison; ``python -m repro.studies specs`` lists
+them.  The legacy entry points
 (``repro.sim.report.saturation_sweep`` / ``compare_policies`` /
 ``Fabric.sim_sweep``) are thin deprecated shims over this package.
 """

@@ -58,9 +58,18 @@ def cmd_run(args) -> int:
     if args.table:
         print()
         print(out.table())
-    print("saturation points:")
-    for name, knee in out.saturation_points().items():
-        print(f"  {name}: {knee if knee is not None else '> max load'}")
+    replays = out.replay_points()
+    if replays:
+        print("collective replay (measured vs contention-free bound):")
+        for name, rp in replays.items():
+            print(f"  {name}: measured={rp['measured']} "
+                  f"ideal={rp['ideal']} ratio={rp['ratio']}")
+    if len(replays) < len(out.experiments):
+        print("saturation points:")
+        for name, knee in out.saturation_points().items():
+            if name in replays:
+                continue
+            print(f"  {name}: {knee if knee is not None else '> max load'}")
     return 0
 
 

@@ -91,7 +91,15 @@ class StudyResult:
     def saturation_points(self, threshold: float = 0.95
                           ) -> dict[str, float | None]:
         """Per experiment: the smallest offered load whose accepted
-        throughput (seed-averaged) falls below ``threshold * offered``."""
+        throughput (seed-averaged) falls below ``threshold * offered``.
+
+        ``threshold`` is the tolerated shortfall fraction before a load
+        point counts as saturated — 0.95 (the literature's convention)
+        flags the knee where the fabric stops accepting ~all offered
+        traffic, while tolerating sub-5% sampling noise on uncongested
+        points.  Returns ``None`` for experiments that never cross it
+        (including collective replays, whose offered load is 0 — see
+        :meth:`replay_points` for their headline numbers)."""
         out = {}
         for exp in self.experiments:
             knee = None
@@ -103,6 +111,32 @@ class StudyResult:
             out[exp.name] = knee
         return out
 
+    def replay_points(self) -> dict[str, dict]:
+        """Per collective-replay experiment: measured completion cycles
+        vs the schedule algebra's contention-free bound.
+
+        ``measured`` is the worst completion over the experiment's grid
+        points; ``ratio`` is ``measured / ideal`` — 1.0 certifies the
+        schedule ran contention-free under queueing, anything above it
+        quantifies the serialization the replay uncovered.  Experiments
+        without replay records are omitted.
+        """
+        out: dict[str, dict] = {}
+        for exp in self.experiments:
+            rows = [r for r in self.results
+                    if r.experiment == exp.name
+                    and r.completion_cycles is not None]
+            if not rows:
+                continue
+            measured = max(r.completion_cycles for r in rows)
+            ideal = rows[0].ideal_cycles
+            out[exp.name] = {
+                "measured": measured,
+                "ideal": ideal,
+                "ratio": round(measured / ideal, 3) if ideal else None,
+            }
+        return out
+
     def table(self) -> str:
         from repro.sim.report import format_table
         return format_table(self.results)
@@ -112,8 +146,20 @@ class Study:
     """Run the grid of one spec file / one or more experiment specs.
 
     ``store`` (a path or :class:`JsonlStore`) turns on persistence and
-    resume; ``backend`` is ``"auto"`` (default), ``"jax"``, or
-    ``"numpy"``.
+    resume; ``backend`` picks the engine:
+
+    * ``"auto"`` / ``None`` (default) — the compiled :mod:`repro.sim.xengine`
+      whenever ``import jax`` succeeds, else the numpy oracle.  There is
+      no result-shape difference, only speed: the compiled path batches
+      each experiment's entire (load x seed) grid into one jit program
+      (and same-shape grids across experiments share the compilation via
+      the jit cache), while numpy loops :func:`repro.sim.engine.simulate`
+      per point.
+    * ``"jax"`` — force the compiled engine (raises if jax is absent).
+    * ``"numpy"`` — force the oracle; per-point results are bit-stable
+      across resumes (the compiled path re-draws arbitration streams
+      when a resumed batch has different geometry, so its resumed points
+      are statistically — not bitwise — equivalent).
     """
 
     def __init__(self, experiments, *, store=None, backend: str | None = None):
@@ -258,7 +304,12 @@ class Study:
             traffic = tf(load, seed)
             cycles = (sweep.cycles if sweep.cycles is not None
                       else max(traffic.horizon, 1))
+            # Collective replays measure completion from cycle 0 — a
+            # warmup window would carve latency/throughput out of the
+            # very phases being measured (the jax path does the same
+            # inside xengine.sweep).
             warmup = (sweep.warmup if sweep.warmup is not None
+                      else 0 if traffic.workload is not None
                       else cycles // 4)
             stats = simulate(topo, exp.routing.make(), traffic,
                              terminals=exp.terminals, cycles=cycles,

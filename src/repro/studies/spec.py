@@ -231,17 +231,37 @@ class FabricSpec(_SpecBase):
 # Traffic.
 # ---------------------------------------------------------------------------
 
-#: pattern name -> needs the topology's DragonflyConfig instead of N.
-_PATTERNS = ("uniform", "permutation", "hotspot", "adversarial")
+#: Declarative pattern names: the open-loop generators of
+#: :mod:`repro.sim.traffic` plus the closed collective-replay kind.
+_PATTERNS = ("uniform", "permutation", "hotspot", "adversarial", "workload")
 
 
 @dataclass(frozen=True, eq=True)
 class TrafficSpec(_SpecBase):
-    """A synthetic traffic pattern by name.
+    """A traffic pattern by name.
 
-    ``params`` forwards generator kwargs (``hot_fraction``, ``hot_dst``,
-    ``partner_shift``, ``perm``, and a fixed ``seed`` override — without
-    one, each grid point's traffic draws from its own sweep seed).
+    **Open-loop patterns** (``uniform`` / ``permutation`` / ``hotspot`` /
+    ``adversarial``): ``params`` forwards generator kwargs
+    (``hot_fraction``, ``hot_dst``, ``partner_shift``, ``perm``) plus an
+    optional fixed ``seed`` — without one, each grid point's packet set
+    draws from its own sweep seed, so multi-seed grids measure traffic
+    variance; with one, every point replays the identical packet set and
+    the seeds axis varies only arbitration.  These patterns need
+    ``sweep.cycles`` to size their generation window, and the sweep's
+    ``loads`` are their offered load in packets/terminal/cycle.
+
+    **Collective replay** (``workload``): a closed, phase-barriered
+    workload from :mod:`repro.sim.workloads` — the sweep's ``loads`` and
+    ``seeds`` are ignored by generation (keys only) and ``cycles`` may
+    be ``None`` (the run completes when the workload drains).  ``params``
+    is either
+
+    * ``{"collective": "all_to_all" | "all_reduce", "message_size": m}``
+      — the workload is derived from the experiment's *own fabric*
+      (its LACIN schedules), so the spec stays fully declarative; or
+    * ``{"workload": {...}}`` — an explicit
+      :meth:`repro.sim.workloads.Workload.to_dict` payload, replayed
+      verbatim (still serializable).
     """
     pattern: str
     params: dict = field(default_factory=dict)
@@ -268,6 +288,9 @@ class TrafficSpec(_SpecBase):
             if _accepts_seed(inner):
                 return inner
             return lambda load, seed: inner(load)
+        if self.pattern == "workload":
+            tr = self._resolve_workload(topo).traffic()
+            return lambda load, seed: tr
         if self.pattern not in _PATTERNS:
             raise ValueError(
                 f"unknown traffic pattern {self.pattern!r}; expected one "
@@ -299,8 +322,47 @@ class TrafficSpec(_SpecBase):
                        **kw)
         return make
 
+    def _resolve_workload(self, topo):
+        """The :class:`repro.sim.workloads.Workload` this spec replays on
+        ``topo`` — explicit phases if given, else the named collective's
+        step sequence on the fabric the topology was built from."""
+        from repro.sim.workloads import Workload, collective_workload
+        kw = dict(self.params)
+        if "workload" in kw:
+            w = Workload.from_dict(kw["workload"])
+            if w.num_switches != topo.num_switches:
+                # Packets sourced past the topology's switch count would
+                # never inject; fail here instead of spinning the drain
+                # cutoff into a misleading "deadlock" error.
+                raise ValueError(
+                    f"explicit workload {w.name!r} spans {w.num_switches} "
+                    f"switches but the experiment's fabric "
+                    f"{topo.name!r} has {topo.num_switches}")
+            return w
+        meta = getattr(topo, "meta", {}) or {}
+        if "instance" in meta and "n" in meta:
+            from repro.fabric import make_fabric
+            fab = make_fabric(meta["instance"], int(meta["n"]))
+        elif meta.get("config") is not None:
+            from repro.fabric import make_fabric
+            fab = make_fabric(meta["config"])
+        else:
+            raise ValueError(
+                f"workload traffic needs a fabric to derive the "
+                f"{kw.get('collective', 'all_to_all')!r} schedule from, "
+                f"but topology {topo.name!r} records no construction "
+                f"metadata; pass explicit phases via params['workload']")
+        return collective_workload(
+            fab, str(kw.get("collective", "all_to_all")),
+            message_size=int(kw.get("message_size", 1)))
+
     @property
     def label(self) -> str:
+        if self.pattern == "workload":
+            wl = self.params.get("workload")
+            if isinstance(wl, Mapping):
+                return f"replay-{wl.get('name', 'workload')}"
+            return f"replay-{self.params.get('collective', 'all_to_all')}"
         return self.pattern
 
 

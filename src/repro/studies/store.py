@@ -52,6 +52,13 @@ class Result:
     #: :meth:`repro.studies.spec.ExperimentSpec.digest`); ``""`` for
     #: inline specs and records from older stores.
     spec_digest: str = ""
+    # -- collective-replay summary (None for open-loop experiments) ---------
+    #: Cycle the workload's last packet delivered.
+    completion_cycles: int | None = None
+    #: Contention-free lower bound (num_steps x message_size).
+    ideal_cycles: int | None = None
+    #: Per-phase durations in cycles.
+    phase_cycles: list | None = None
     #: The full in-memory stats of a freshly executed point (histograms,
     #: raw link loads).  ``None`` for points restored from a store.
     stats: RunStats | None = field(default=None, compare=False, repr=False)
@@ -80,6 +87,10 @@ class Result:
             link_util_cv=round(float(stats.link_util_cv), 4),
             saturated=bool(stats.saturated),
             spec_digest=spec_digest,
+            completion_cycles=stats.completion_cycles,
+            ideal_cycles=stats.ideal_cycles,
+            phase_cycles=(list(stats.phase_cycles)
+                          if stats.phase_cycles is not None else None),
             stats=stats)
 
     def record(self) -> dict:
