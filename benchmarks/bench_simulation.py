@@ -144,8 +144,12 @@ def sim_rows():
                                 warmup=speed_cycles // 4),
         terminals=12, name="speed/cin16/uniform/minimal")
     us_np, out_np = _timed(lambda: _run_study(speed_exp, "numpy"), best_of=2)
-    us_cold, _ = _timed(lambda: _run_study(speed_exp, "jax"))
+    us_cold, out_cold = _timed(lambda: _run_study(speed_exp, "jax"))
     us_jax, out_jx = _timed(lambda: _run_study(speed_exp, "jax"), best_of=2)
+    # The engine's own telemetry (repro.obs) splits the cold run into
+    # program build vs device execution — the measured compile tax, not
+    # the cold-minus-warm estimate the wall clocks imply.
+    cold_telemetry = out_cold.telemetry().get(speed_exp.name, {})
     lane_cycles = len(speed_exp.sweep.loads) * len(speed_exp.sweep.seeds) \
         * speed_cycles
     acc_np = np.mean([[r.accepted for r in ss] for ss in out_np.grid()],
@@ -164,6 +168,8 @@ def sim_rows():
         "sim_cycles_per_sec_jax": round(lane_cycles / (us_jax / 1e6), 1),
         "speedup_vs_numpy": round(us_np / us_jax, 2),
         "speedup_vs_numpy_with_compile": round(us_np / us_cold, 2),
+        "jax_compile_s": cold_telemetry.get("compile_s"),
+        "jax_execute_s": cold_telemetry.get("execute_s"),
         "backends_agree": agree,
     }
     out.append(row("sim/speed/cin16_sweep/numpy", us_np,

@@ -17,8 +17,10 @@ latency/throughput trajectory it records per run is exactly what
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
+import time
 import traceback
 
 
@@ -36,12 +38,40 @@ MODULES = [
 ]
 
 
+def _stamp_environment(block_wall_s: dict[str, float]) -> None:
+    """Merge an environment/provenance block into the BENCH_sim.json
+    artifact: host + library versions, per-module wall time, and the
+    simulator's measured xengine compile-vs-execute split — the context
+    that makes a recorded trajectory comparable run over run."""
+    artifact = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
+    if not os.path.exists(artifact):
+        return
+    from repro.obs.telemetry import provenance
+    with open(artifact) as f:
+        payload = json.load(f)
+    env = provenance()
+    env["block_wall_s"] = block_wall_s
+    speed = payload.get("sim_speed", {})
+    env["xengine"] = {
+        "compile_s": speed.get("jax_compile_s"),
+        "execute_s": speed.get("jax_execute_s"),
+        "cold_s": speed.get("jax_cold_s"),
+        "steady_s": speed.get("jax_steady_s"),
+    }
+    payload["environment"] = env
+    with open(artifact, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
     if "--quick" in sys.argv[1:]:
         os.environ["REPRO_BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
     failures = 0
+    block_wall_s: dict[str, float] = {}
     for name in MODULES:
+        t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["rows"])
             from benchmarks.common import emit
@@ -50,6 +80,13 @@ def main() -> None:
             failures += 1
             print(f"{name},0,ERROR {type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+        block_wall_s[name] = round(time.perf_counter() - t0, 3)
+    try:
+        _stamp_environment(block_wall_s)
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"environment,0,ERROR {type(e).__name__}: {e}")
+        traceback.print_exc(file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,55 @@
+"""``repro.obs`` — observability for the simulation stack.
+
+Everything the engines report elsewhere is an end-of-run aggregate
+(:class:`~repro.sim.metrics.RunStats`).  This package adds the
+*instruments*: time-series traces of the fabric's dynamics, per-packet /
+per-phase spans exported as Chrome trace-event JSON (loadable in
+``ui.perfetto.dev``), and wall-clock + compile-vs-execute telemetry
+around every compiled-engine program build.
+
+==================  =======================================================
+:mod:`.trace`       :class:`TraceConfig` / :class:`Trace` — the sampled
+                    time-series channels both engines record (link loads,
+                    queue occupancy, injections, deliveries) and the
+                    derived series (utilization, backlog, in-flight)
+:mod:`.spans`       Chrome trace-event builders: phase spans, per-packet
+                    hop spans, counter tracks, schema validation
+:mod:`.telemetry`   compile-vs-execute timing of jit programs
+                    (:func:`timed_compiled`) and the environment
+                    :func:`provenance` block study records persist
+:mod:`.export`      one-call composition: a traced replay ->
+                    Perfetto-loadable JSON with one lane per switch and
+                    one span per phase
+==================  =======================================================
+
+Capture is engine-native: the numpy :class:`~repro.sim.engine.Engine`
+samples at the end of each cycle, and :mod:`repro.sim.xengine` compiles
+statically-shaped ring buffers into its loop (contiguous
+``dynamic_update_slice`` rows, like its delivery log — zero scatters in
+the hot path).  On drained deterministic workloads (collective replays
+whose phases are matchings, one-shot permutations) the two engines'
+traces agree *exactly*; ``tests/test_obs.py`` pins that.
+
+Quickstart::
+
+    from repro import sim
+    from repro.obs import TraceConfig, export_perfetto, replay_trace_events
+
+    fab = fabric.make_fabric("xor", 16)
+    stats = fab.replay("all_to_all", trace=TraceConfig(packets=8))
+    export_perfetto("replay.json", replay_trace_events(stats))
+    # -> open replay.json in ui.perfetto.dev
+"""
+from .trace import Trace, TraceConfig, derive_backlog
+from .spans import (counter_events, export_perfetto, packet_events,
+                    phase_events, validate_trace_events)
+from .telemetry import provenance, timed_compiled
+from .export import link_classes, replay_trace_events
+
+__all__ = [
+    "Trace", "TraceConfig", "derive_backlog",
+    "counter_events", "export_perfetto", "packet_events", "phase_events",
+    "validate_trace_events",
+    "provenance", "timed_compiled",
+    "link_classes", "replay_trace_events",
+]

@@ -1,0 +1,122 @@
+"""Runtime telemetry: compile-vs-execute timing and environment provenance.
+
+The compile tax is ROADMAP item 1's whole problem: the compiled engine's
+steady-state speedup is real, but a cold program build eats it.  This
+module makes the split *measurable everywhere* instead of something the
+speed benchmark reconstructs from cold-vs-warm wall clocks:
+
+* :func:`timed_compiled` wraps a jit-compiled function's invocation in
+  JAX's ahead-of-time path (``lower() -> compile() -> call``), timing
+  the compile and the execute separately, with a process-level cache so
+  repeat shapes pay compile once (the same contract ``jax.jit``'s own
+  cache gives).  :func:`repro.sim.xengine.sweep` routes every program
+  build through it.
+* :func:`provenance` is the environment block each
+  :class:`repro.studies.store.Result` persists: host, interpreter and
+  library versions, cpu count, plus the run's timing dict — enough to
+  interpret a stored wall-clock number months later on different
+  hardware.
+
+Timing dicts are plain JSON-scalars so they serialize into JSONL stores
+and BENCH artifacts unchanged::
+
+    {"backend": "jax", "compile_s": 6.51, "execute_s": 0.74,
+     "total_s": 7.25, "compile_cached": false, "grid_points": 24}
+"""
+from __future__ import annotations
+
+import os
+import platform
+import time
+
+import numpy as np
+
+__all__ = ["timed_compiled", "provenance", "timing_dict"]
+
+#: Compiled executables keyed by (function, static arg, arg avals).
+#: Bounded: a process that really builds this many distinct programs is
+#: sweeping shapes, and caching them all would pin device memory.
+_CACHE: dict = {}
+_CACHE_LIMIT = 64
+
+
+def timing_dict(backend: str, *, compile_s: float = 0.0,
+                execute_s: float = 0.0, compile_cached: bool = False,
+                grid_points: int = 1) -> dict:
+    """The canonical timing record (see the module docstring).  A batched
+    program's dict is shared by every grid point it produced —
+    ``grid_points`` says how many, so consumers can amortize."""
+    return {
+        "backend": backend,
+        "compile_s": round(float(compile_s), 6),
+        "execute_s": round(float(execute_s), 6),
+        "total_s": round(float(compile_s) + float(execute_s), 6),
+        "compile_cached": bool(compile_cached),
+        "grid_points": int(grid_points),
+    }
+
+
+def _aval_key(args) -> tuple:
+    import jax
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (treedef,
+            tuple((tuple(np.shape(leaf)),
+                   str(getattr(leaf, "dtype", type(leaf).__name__)))
+                  for leaf in leaves))
+
+
+def timed_compiled(fn, static_arg, *args, grid_points: int = 1
+                   ) -> tuple:
+    """Call ``fn(static_arg, *args)`` — a ``jax.jit(...,
+    static_argnums=0)`` function — through the AOT path, returning
+    ``(output, timing)`` where ``timing`` separates program build from
+    execution (:func:`timing_dict`).
+
+    First call for a (static_arg, arg-shapes) signature lowers and
+    compiles (``compile_s`` > 0, ``compile_cached`` False); repeats hit
+    the process cache (``compile_s`` 0.0, ``compile_cached`` True).
+    Execution is timed to completion (``block_until_ready``), so
+    ``execute_s`` is device time, not dispatch time.
+    """
+    import jax
+    key = (fn, static_arg, _aval_key(args))
+    cached = key in _CACHE
+    compile_s = 0.0
+    if not cached:
+        t0 = time.perf_counter()
+        compiled = fn.lower(static_arg, *args).compile()
+        compile_s = time.perf_counter() - t0
+        if len(_CACHE) >= _CACHE_LIMIT:
+            _CACHE.clear()
+        _CACHE[key] = compiled
+    t1 = time.perf_counter()
+    out = jax.block_until_ready(_CACHE[key](*args))
+    execute_s = time.perf_counter() - t1
+    return out, timing_dict("jax", compile_s=compile_s,
+                            execute_s=execute_s, compile_cached=cached,
+                            grid_points=grid_points)
+
+
+def provenance(timing: dict | None = None, *, backend: str | None = None,
+               spec_digest: str | None = None) -> dict:
+    """The environment/provenance block persisted with results and
+    benchmark artifacts: where and with what a number was produced."""
+    out = {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+        out["jax"] = jax.__version__
+    except Exception:       # pragma: no cover - jax is a hard dep in-repo
+        out["jax"] = None
+    if backend is not None:
+        out["backend"] = backend
+    if spec_digest:
+        out["spec_digest"] = spec_digest
+    if timing is not None:
+        out["timings"] = dict(timing)
+    return out

@@ -24,8 +24,12 @@ Packets advance at most one hop per cycle (unit link latency + bandwidth).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
+from ..obs.telemetry import timing_dict
+from ..obs.trace import Trace, TraceConfig, derive_backlog
 from .link import LinkLoadCounter, LinkTable
 from .metrics import (RunStats, attach_replay, build_stats,
                       replay_timeline)
@@ -43,7 +47,7 @@ class Engine:
     def __init__(self, topo: SimTopology, policy: RoutingPolicy,
                  traffic: Traffic, *, terminals: int | None = None,
                  eject_bw: int | None = None, num_vcs: int | None = None,
-                 queue_capacity: int = 4, seed: int = 0):
+                 queue_capacity: int = 4, seed: int = 0, trace=None):
         self.topo = topo
         self.policy = policy
         self.traffic = traffic
@@ -123,6 +127,27 @@ class Engine:
         # counting them would inflate accepted throughput past offered.
         self.meas_end = float("inf")
 
+        # -- time-series trace (repro.obs) ----------------------------------
+        # Sampling happens at end-of-cycle, after movement, so every channel
+        # reflects the state the next cycle starts from — the same point the
+        # compiled engine's ring buffers capture.
+        self.trace_cfg = TraceConfig.coerce(trace)
+        self._span_mask = None
+        if self.trace_cfg is not None:
+            self._tr_cycles: list = []
+            self._tr_link: list = []
+            self._tr_occ: list = []
+            self._tr_inj: list = []
+            self._tr_del: list = []
+            self._tr_events: list = []
+            k = self.trace_cfg.packets
+            if k > 0 and m > 0:
+                # K packets spread evenly over the (src, gen)-sorted ids, so
+                # the sample covers sources and phases rather than one block.
+                ids = np.unique(np.linspace(0, m - 1, min(k, m)).astype(np.int64))
+                self._span_mask = np.zeros(m, dtype=bool)
+                self._span_mask[ids] = True
+
     def _advance_barrier(self, c: int) -> None:
         """Open the next phase barrier(s) whose packets are all delivered,
         recording the completion cycle (empty phases complete in place)."""
@@ -146,6 +171,44 @@ class Engine:
 
     # -- one simulated cycle -------------------------------------------------
     def step(self) -> None:
+        self._step_core()
+        cfg = self.trace_cfg
+        if cfg is not None:
+            c = self.cycle - 1
+            if c % cfg.stride == 0 and c // cfg.stride < cfg.max_samples:
+                self._sample(c)
+
+    def _sample(self, c: int) -> None:
+        n = self.topo.num_switches
+        self._tr_cycles.append(c)
+        self._tr_link.append(self.load.total.copy())
+        self._tr_occ.append(self.fabric.occ.reshape(n, -1).sum(axis=1))
+        self._tr_inj.append(self.term_next.reshape(n, -1).sum(axis=1))
+        self._tr_del.append(self.delivered_total)
+
+    def _finalize_trace(self) -> Trace:
+        n = self.topo.num_switches
+        s = len(self._tr_cycles)
+        cycles = np.asarray(self._tr_cycles, dtype=np.int64)
+        injected = np.asarray(self._tr_inj, dtype=np.int64).reshape(s, n)
+        backlog = derive_backlog(
+            cycles, injected, self.gen, self.blk_start, self.blk_end,
+            phase_done=self.phase_done if self.phase_cum is not None else None)
+        return Trace(
+            stride=self.trace_cfg.stride, cycles=cycles,
+            link_load=np.asarray(self._tr_link, np.int64).reshape(
+                s, self.links.num_link_slots),
+            queue_occ=np.asarray(self._tr_occ, np.int64).reshape(s, n),
+            injected=injected,
+            delivered=np.asarray(self._tr_del, np.int64),
+            backlog=backlog,
+            meta={"topology": self.topo.name, "policy": self.policy.name,
+                  "backend": "numpy", "num_switches": n,
+                  "num_ports": self.topo.num_ports,
+                  "terminals": self.terminals},
+            events=self._tr_events)
+
+    def _step_core(self) -> None:
         topo, fab, links = self.topo, self.fabric, self.links
         p, v, cap = topo.num_ports, self.num_vcs, self.queue_capacity
         c = self.cycle
@@ -161,6 +224,10 @@ class Engine:
             win = arbitrate(sw, self.rng.random(eq.size), k=self.eject_bw)
             fab.pop(eq[win])
             pids = ep[win]
+            if self._span_mask is not None:
+                for pd in pids[self._span_mask[pids]]:
+                    self._tr_events.append(
+                        (int(pd), c, int(self.loc[pd]), -1))
             self.deliver[pids] = c
             self.delivered_total += win.size
             if self.warmup <= c < self.meas_end:
@@ -236,6 +303,12 @@ class Engine:
         pid = r_pid[win]
         dq = r_dq[win]
         nbr = links.neighbor_flat[r_link[win]]
+        if self._span_mask is not None:
+            traced = self._span_mask[pid]
+            if traced.any():
+                frm = r_loc[win][traced]
+                for a, b, d in zip(pid[traced], frm, nbr[traced]):
+                    self._tr_events.append((int(a), c, int(b), int(d)))
         fab.push(dq, pid)
         self.loc[pid] = nbr
         self.hops[pid] += 1
@@ -262,12 +335,14 @@ class Engine:
         # count, and every delivery belongs to the workload being timed.
         self.meas_end = horizon if self.phase_cum is None else float("inf")
 
+        t0 = time.perf_counter()
         while self.cycle < horizon:
             if self.cycle == warmup:
                 self.load.reset_window()
             self.step()
         while drain and self.delivered_total < m and self.cycle < cutoff:
             self.step()
+        wall_s = time.perf_counter() - t0
         if drain and self.delivered_total < m:
             raise RuntimeError(
                 f"{self.topo.name}/{self.policy.name}: "
@@ -286,14 +361,22 @@ class Engine:
                 gen=gen_arg, deliver=self.deliver, link_counter=self.load,
                 delivered_in_window=self.delivered_in_window,
                 in_flight=self.fabric.total_occupancy)
-            return attach_replay(stats, self.traffic.workload,
-                                 self.phase_done)
-        return build_stats(
+            stats = attach_replay(stats, self.traffic.workload,
+                                  self.phase_done)
+            return self._attach_obs(stats, wall_s)
+        stats = build_stats(
             topology=self.topo, policy=self.policy, traffic=self.traffic,
             cycles=max(horizon, 1), warmup=warmup, terminals=self.terminals,
             gen=self.gen, deliver=self.deliver, link_counter=self.load,
             delivered_in_window=self.delivered_in_window,
             in_flight=self.fabric.total_occupancy)
+        return self._attach_obs(stats, wall_s)
+
+    def _attach_obs(self, stats: RunStats, wall_s: float) -> RunStats:
+        stats.timing = timing_dict("numpy", execute_s=wall_s)
+        if self.trace_cfg is not None:
+            stats.trace = self._finalize_trace()
+        return stats
 
 
 def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
@@ -302,7 +385,7 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
              cycles: int | None = None,
              warmup: int = 0, drain: bool | None = None,
              max_cycles: int | None = None, seed: int = 0,
-             backend: str = "numpy") -> RunStats:
+             backend: str = "numpy", trace=None) -> RunStats:
     """Run one simulation; ``backend`` picks the engine.
 
     ``terminals`` defaults to what the traffic object was generated with
@@ -316,18 +399,25 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
       equivalent, not bit-identical (arbitration tie-breaks draw from a
       different RNG).  Prefer :func:`repro.sim.xengine.sweep` when running
       many (load, seed) points — it batches them into one program.
+
+    ``trace`` turns on time-series recording (anything
+    :meth:`repro.obs.TraceConfig.coerce` accepts: ``True``, a config, or
+    a kwargs dict); the sampled :class:`~repro.obs.Trace` lands on
+    ``stats.trace``.  Both backends also stamp ``stats.timing`` with the
+    run's wall-clock (and, for ``"jax"``, compile-vs-execute) split.
     """
     if backend == "jax":
         from . import xengine
         return xengine.simulate_jax(
             topo, policy, traffic, terminals=terminals, eject_bw=eject_bw,
             num_vcs=num_vcs, queue_capacity=queue_capacity, cycles=cycles,
-            warmup=warmup, drain=drain, max_cycles=max_cycles, seed=seed)
+            warmup=warmup, drain=drain, max_cycles=max_cycles, seed=seed,
+            trace=trace)
     if backend != "numpy":
         raise ValueError(f"unknown simulator backend {backend!r}; "
                          f"expected 'numpy' or 'jax'")
     eng = Engine(topo, policy, traffic, terminals=terminals,
                  eject_bw=eject_bw, num_vcs=num_vcs,
-                 queue_capacity=queue_capacity, seed=seed)
+                 queue_capacity=queue_capacity, seed=seed, trace=trace)
     return eng.run(cycles=cycles, warmup=warmup, drain=drain,
                    max_cycles=max_cycles)

@@ -47,6 +47,15 @@ class RunStats:
     #: The schedule algebra's contention-free lower bound
     #: (:attr:`repro.sim.workloads.Workload.ideal_cycles`).
     ideal_cycles: int | None = None
+    # -- observability (repro.obs); excluded from equality: two runs with
+    # identical dynamics are the same run regardless of wall clock -----------
+    #: Wall-clock/compile-vs-execute record
+    #: (:func:`repro.obs.telemetry.timing_dict`); a batched sweep shares
+    #: one dict across its grid points.
+    timing: dict | None = field(default=None, compare=False)
+    #: Sampled time series (:class:`repro.obs.trace.Trace`) when the run
+    #: was traced; ``None`` otherwise.
+    trace: object | None = field(default=None, repr=False, compare=False)
 
     @property
     def delivery_fraction(self) -> float:

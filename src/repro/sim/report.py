@@ -89,8 +89,15 @@ def saturation_point(stats: Sequence[RunStats], *, threshold: float = 0.95
 
 
 def to_record(stats: RunStats) -> dict:
-    """JSON-serializable summary (histograms/raw loads dropped)."""
-    return {
+    """JSON-serializable summary (histograms/raw loads dropped).
+
+    Collective-replay runs additionally carry ``completion_cycles`` /
+    ``ideal_cycles`` / ``phase_cycles`` — the numbers a replay exists to
+    measure — and every record keeps ``in_flight_at_end`` (0 on a
+    drained run; anything else means undelivered residue).  When the
+    run was timed (``stats.timing``) the record includes it verbatim.
+    """
+    rec = {
         "topology": stats.topology,
         "policy": stats.policy,
         "traffic": stats.traffic,
@@ -109,8 +116,18 @@ def to_record(stats: RunStats) -> dict:
         "link_util_max": round(stats.link_util_max, 4),
         "link_util_mean": round(stats.link_util_mean, 4),
         "link_util_cv": round(stats.link_util_cv, 4),
+        "in_flight_at_end": stats.in_flight_at_end,
         "saturated": stats.saturated,
     }
+    if stats.completion_cycles is not None:
+        rec["completion_cycles"] = stats.completion_cycles
+    if stats.ideal_cycles is not None:
+        rec["ideal_cycles"] = stats.ideal_cycles
+    if stats.phase_cycles is not None:
+        rec["phase_cycles"] = [int(x) for x in stats.phase_cycles]
+    if stats.timing is not None:
+        rec["timing"] = dict(stats.timing)
+    return rec
 
 
 def save_json(stats: Sequence[RunStats], path: str, *, extra: dict | None = None

@@ -393,7 +393,8 @@ def collective_workload(fabric, collective: str = "all_to_all", *,
 def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
            terminals: int | None = None, eject_bw: int | None = None,
            num_vcs: int | None = None, queue_capacity: int = 4,
-           max_cycles: int | None = None, seed: int = 0) -> RunStats:
+           max_cycles: int | None = None, seed: int = 0,
+           trace=None) -> RunStats:
     """Replay ``workload`` on ``topo`` under ``policy``; returns the
     engine's :class:`~repro.sim.metrics.RunStats` with the replay fields
     set: ``phase_cycles`` (per-phase durations), ``completion_cycles``
@@ -413,4 +414,5 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
     return simulate(topo, policy, workload.traffic(), terminals=terminals,
                     eject_bw=eject_bw, num_vcs=num_vcs,
                     queue_capacity=queue_capacity, warmup=0,
-                    max_cycles=max_cycles, seed=seed, backend=backend)
+                    max_cycles=max_cycles, seed=seed, backend=backend,
+                    trace=trace)

@@ -68,6 +68,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..obs.telemetry import timed_compiled
+from ..obs.trace import Trace, TraceConfig, derive_backlog
 from .engine import _DRAIN_SLACK
 from .link import LinkLoadCounter, LinkTable
 from .metrics import (RunStats, attach_replay, build_stats,
@@ -119,6 +121,12 @@ class XSpec(NamedTuple):
     #: and ``phase_done`` windows (one static (B, num_phases) record)
     #: capture each phase's completion cycle.  0 = open-loop traffic.
     num_phases: int = 0
+    #: Time-series tracing (repro.obs): sample the trace ring buffers
+    #: every ``trace_stride`` cycles into ``trace_samples`` statically
+    #: allocated rows.  0 = off — the defaults keep the compiled program
+    #: (and its jit cache key) identical to an untraced build.
+    trace_stride: int = 0
+    trace_samples: int = 0
 
 
 class _Tables(NamedTuple):
@@ -181,6 +189,14 @@ class _State(NamedTuple):
     delivered_win: jax.Array     # (B,)
     phase_done: jax.Array        # (B, num_phases) completion cycle, -1
     cycle: jax.Array             # scalar, shared by every copy
+    # Trace ring buffers (repro.obs): S = spec.trace_samples rows, one
+    # contiguous dynamic_update_slice row write per sampled cycle — the
+    # same zero-scatter pattern as ej_log.  (1,)/(1, 1) dummies when off.
+    tr_cycle: jax.Array          # (S,) sampled cycle index, -1 = unwritten
+    tr_link: jax.Array           # (S, L) cumulative link traversals
+    tr_occ: jax.Array            # (S, B*N) per-switch queue occupancy
+    tr_inj: jax.Array            # (S, B*N) cumulative injections per switch
+    tr_del: jax.Array            # (S, B) cumulative deliveries per copy
 
 
 def _pack_attr(mid, phase, hops):
@@ -511,12 +527,43 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
     load_window = state.load_window + (
         has_w & in_window[tables.copy_of_link]).astype(_I32)
 
+    # -- trace sampling (end of cycle c, after movement) -------------------
+    # Gated at Python trace time on the static spec, so an untraced
+    # program is byte-for-byte the pre-trace program.  Row writes are
+    # read-modify-write: an out-of-range dynamic_update_slice start
+    # clamps (it would silently overwrite the last row), so the row is
+    # first read and only replaced when this cycle really samples.
+    if spec.trace_stride:
+        row = jnp.minimum(c // spec.trace_stride, spec.trace_samples - 1)
+        write = ((c % spec.trace_stride) == 0) & (
+            c // spec.trace_stride < spec.trace_samples)
+
+        def _row_write(rbuf, vec):
+            cur = lax.dynamic_slice_in_dim(rbuf, row, 1, axis=0)
+            new = jnp.where(write, vec[None, :].astype(rbuf.dtype), cur)
+            return lax.dynamic_update_slice_in_dim(rbuf, new, row, axis=0)
+
+        cur_c = lax.dynamic_slice_in_dim(state.tr_cycle, row, 1, axis=0)
+        tr_cycle = lax.dynamic_update_slice_in_dim(
+            state.tr_cycle, jnp.where(write, c.astype(_I32), cur_c),
+            row, axis=0)
+        tr_link = _row_write(state.tr_link, load_total)
+        tr_occ = _row_write(state.tr_occ,
+                            occ.reshape(blocks, pv).sum(axis=1))
+        tr_inj = _row_write(state.tr_inj,
+                            term_next.reshape(blocks, t).sum(axis=1))
+        tr_del = _row_write(state.tr_del, delivered_total)
+    else:
+        tr_cycle, tr_link = state.tr_cycle, state.tr_link
+        tr_occ, tr_inj, tr_del = state.tr_occ, state.tr_inj, state.tr_del
+
     return _State(buf=buf, head=head, occ=occ, deliver=deliver,
                   ej_log=ej_log, term_next=term_next, pressure=pressure,
                   load_total=load_total, load_window=load_window,
                   delivered_total=delivered_total,
                   delivered_win=delivered_win, phase_done=phase_done,
-                  cycle=c + 1)
+                  cycle=c + 1, tr_cycle=tr_cycle, tr_link=tr_link,
+                  tr_occ=tr_occ, tr_inj=tr_inj, tr_del=tr_del)
 
 
 @partial(jax.jit, static_argnums=0)
@@ -541,6 +588,16 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         delivered_win=jnp.zeros(b, _I32),
         phase_done=jnp.full((b, spec.num_phases), -1, _I32),
         cycle=jnp.zeros((), _I32),
+        tr_cycle=jnp.full(spec.trace_samples if spec.trace_stride else 1,
+                          -1, _I32),
+        tr_link=jnp.zeros((spec.trace_samples, b * n * p)
+                          if spec.trace_stride else (1, 1), _I32),
+        tr_occ=jnp.zeros((spec.trace_samples, b * n)
+                         if spec.trace_stride else (1, 1), _I32),
+        tr_inj=jnp.zeros((spec.trace_samples, b * n)
+                         if spec.trace_stride else (1, 1), _I32),
+        tr_del=jnp.zeros((spec.trace_samples, b)
+                         if spec.trace_stride else (1, 1), _I32),
     )
 
     def body(st: _State):
@@ -560,7 +617,7 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         # loop iteration, amortizing per-op dispatch overhead.
         final = lax.fori_loop(0, spec.horizon, lambda _i, st: body(st),
                               state, unroll=8)
-    return {
+    out = {
         "deliver": final.deliver,
         "ej_log": final.ej_log,
         "load_total": final.load_total,
@@ -571,6 +628,11 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         "cycle": final.cycle,
         "in_flight": final.occ.reshape(b, n * p * v).sum(axis=1),
     }
+    if spec.trace_stride:
+        out.update(tr_cycle=final.tr_cycle, tr_link=final.tr_link,
+                   tr_occ=final.tr_occ, tr_inj=final.tr_inj,
+                   tr_del=final.tr_del)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -625,8 +687,8 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
           terminals: int | None = None, eject_bw: int | None = None,
           num_vcs: int | None = None, queue_capacity: int = 4,
           cycles: int | None = None, warmup: int | None = None,
-          drain: bool | None = None, max_cycles: int | None = None
-          ) -> list[list[RunStats]]:
+          drain: bool | None = None, max_cycles: int | None = None,
+          trace=None) -> list[list[RunStats]]:
     """An entire saturation sweep as one compiled program.
 
     Every (offered load, seed) point becomes one replicated fabric copy
@@ -643,6 +705,15 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     generation window over the grid.  ``terminals`` defaults to the
     traffic objects' own record.  Per-point arbitration streams derive
     from a key over the full seed tuple.
+
+    Every point's stats carry a shared ``timing`` record splitting the
+    program's compile time from its execution
+    (:func:`repro.obs.telemetry.timed_compiled`).  ``trace`` (anything
+    :meth:`repro.obs.TraceConfig.coerce` accepts) compiles statically
+    shaped time-series ring buffers into the loop — per-point
+    :class:`~repro.obs.Trace` objects land on ``stats.trace``.  Packet
+    spans (``TraceConfig.packets``) are a numpy-engine feature and are
+    ignored here.
     """
     policy = _resolve_policy(policy)
     seeded_factory = _accepts_seed(traffic_factory)
@@ -712,6 +783,14 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     q_flat = len(grid) * n * topo.num_ports * num_vcs
     log_deliveries = (not drain
                       and horizon * q_flat <= _LOG_ENTRY_BUDGET)
+    trace_cfg = TraceConfig.coerce(trace)
+    if trace_cfg is not None:
+        # Static row budget: a drain run can stop anywhere below the
+        # cutoff, so allocate for the worst case (capped by max_samples);
+        # unwritten rows stay at the -1 sentinel and are dropped below.
+        span = cutoff if drain else horizon
+        trace_samples = min(trace_cfg.max_samples,
+                            (max(span, 1) - 1) // trace_cfg.stride + 1)
     spec = XSpec(
         n=n, ports=topo.num_ports, vcs=num_vcs, cap=queue_capacity,
         terminals=terminals,
@@ -720,7 +799,9 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         threshold=float(getattr(policy, "threshold", 0.0)),
         weight=float(getattr(policy, "weight", 0.0)),
         alpha=0.05, drain=bool(drain), horizon=horizon, cutoff=cutoff,
-        log_deliveries=log_deliveries, num_phases=num_phases)
+        log_deliveries=log_deliveries, num_phases=num_phases,
+        trace_stride=0 if trace_cfg is None else trace_cfg.stride,
+        trace_samples=0 if trace_cfg is None else trace_samples)
 
     links = LinkTable.for_topology(topo, num_vcs)
     tables = _build_tables(topo, links, len(grid), terminals, num_vcs)
@@ -742,7 +823,9 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
             [w.phase_cum(num_phases) for w in wls]).astype(np.int32)
     flat = {k: jnp.asarray(a) for k, a in flat_np.items()}
     key = jax.random.PRNGKey(hash(tuple(s for _, s, _ in grid)) & 0x7FFFFFFF)
-    out = _run_flat(spec, tables, flat, key, jnp.asarray(warmups, _I32))
+    out, timing = timed_compiled(
+        _run_flat, spec, tables, flat, key, jnp.asarray(warmups, _I32),
+        grid_points=len(grid))
     out = jax.tree_util.tree_map(np.asarray, out)
 
     total_m = max(1, int(sum(sizes)))
@@ -758,6 +841,9 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         deliver_all = out["deliver"].astype(np.int64)
 
     n_links = n * topo.num_ports
+    if trace_cfg is not None:
+        tr_valid = np.flatnonzero(out["tr_cycle"] >= 0)
+        tr_cycles = out["tr_cycle"][tr_valid].astype(np.int64)
     results: list[RunStats] = []
     for i, (load, seed, tr) in enumerate(grid):
         m = int(packed[i]["m_real"])
@@ -791,6 +877,32 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         if replaying:
             attach_replay(stats, wls[i],
                           out["phase_done"][i, :wls[i].num_phases])
+        stats.timing = timing
+        if trace_cfg is not None:
+            # Slice copy i's columns out of the flat ring buffers; block
+            # bounds come back to local pid space by removing the copy's
+            # packet-id base.
+            injected = out["tr_inj"][tr_valid][:, i * n:(i + 1) * n
+                                               ].astype(np.int64)
+            backlog = derive_backlog(
+                tr_cycles, injected,
+                packed[i]["gen"][:m].astype(np.int64),
+                packed[i]["blk_start"].astype(np.int64) - int(bases[i]),
+                packed[i]["blk_end"].astype(np.int64) - int(bases[i]),
+                phase_done=(out["phase_done"][i, :wls[i].num_phases]
+                            if replaying else None))
+            stats.trace = Trace(
+                stride=trace_cfg.stride, cycles=tr_cycles,
+                link_load=out["tr_link"][tr_valid][
+                    :, i * n_links:(i + 1) * n_links],
+                queue_occ=out["tr_occ"][tr_valid][:, i * n:(i + 1) * n],
+                injected=injected,
+                delivered=out["tr_del"][tr_valid][:, i],
+                backlog=backlog,
+                meta={"topology": topo.name, "policy": policy.name,
+                      "backend": "jax", "num_switches": n,
+                      "num_ports": topo.num_ports, "terminals": terminals,
+                      "load": load, "seed": seed})
         results.append(stats)
     return [results[li * len(seeds):(li + 1) * len(seeds)]
             for li in range(len(loads))]
@@ -801,7 +913,7 @@ def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
                  num_vcs: int | None = None, queue_capacity: int = 4,
                  cycles: int | None = None, warmup: int | None = None,
                  drain: bool | None = None, max_cycles: int | None = None,
-                 seed: int = 0) -> RunStats:
+                 seed: int = 0, trace=None) -> RunStats:
     """One compiled run (a single-copy :func:`sweep`)."""
     if drain is None:
         drain = traffic.offered == 0
@@ -809,4 +921,4 @@ def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
                  seeds=(seed,), terminals=terminals, eject_bw=eject_bw,
                  num_vcs=num_vcs, queue_capacity=queue_capacity,
                  cycles=cycles, warmup=0 if warmup is None else warmup,
-                 drain=drain, max_cycles=max_cycles)[0][0]
+                 drain=drain, max_cycles=max_cycles, trace=trace)[0][0]

@@ -7,7 +7,14 @@ Commands:
   next to the current directory).  Re-running resumes: grid points whose
   keys are already in the store are skipped.
 * ``show SPEC``  — print the experiments, grid sizes, and store keys a
-  spec expands to, without running anything.
+  spec expands to, without running anything.  ``--trace`` additionally
+  reads the spec's result store and prints each record's provenance
+  (host, backend, compile-vs-execute timings) plus the per-experiment
+  compile-tax summary.
+* ``trace export SPEC`` — run one experiment of a spec with time-series
+  tracing and write a Perfetto/Chrome-loadable trace JSON
+  (``ui.perfetto.dev``).  ``--backend both`` runs the numpy oracle *and*
+  the compiled engine and fails unless their traces agree exactly.
 * ``specs``      — list the bundled spec files.
 
 Examples::
@@ -16,6 +23,10 @@ Examples::
     python -m repro.studies run studies_smoke --backend numpy --table
     python -m repro.studies run cin16_saturation --store knees.jsonl
     python -m repro.studies show my_experiment.json
+    python -m repro.studies show collective_replay --trace
+    python -m repro.studies trace export collective_replay \\
+        --experiment cin-xor-16/replay-all_to_all/minimal \\
+        --backend both --packets 8 --out trace-cin16.json
 """
 from __future__ import annotations
 
@@ -85,6 +96,125 @@ def cmd_show(args) -> int:
               f" warmup={exp.sweep.warmup}")
         print(f"    first key: {exp.key(*pts[0])}")
     print(f"{len(specs)} experiments, {total} grid points")
+    if getattr(args, "trace", False):
+        _show_trace(spec_path, specs, args.store)
+    return 0
+
+
+def _show_trace(spec_path: str, specs, store_arg: str | None) -> None:
+    """The ``show --trace`` tail: stored provenance + compile-tax totals."""
+    store_path = store_arg if store_arg is not None \
+        else _default_store(spec_path)
+    store = JsonlStore(store_path)
+    if not store.exists():
+        print(f"no result store at {store_path} — run the study first "
+              f"(or pass --store)")
+        return
+    records = store.load()
+    print(f"\nstore: {store_path} ({len(records)} records)")
+    timed = 0
+    for key in sorted(records):
+        prov = records[key].provenance or {}
+        timings = prov.get("timings")
+        if timings is None:
+            continue
+        timed += 1
+        amortized = (timings.get("total_s", 0.0)
+                     / max(timings.get("grid_points", 1), 1))
+        cached = " (cached)" if timings.get("compile_cached") else ""
+        print(f"  {key}")
+        print(f"    backend={timings.get('backend')} host={prov.get('host')}"
+              f" jax={prov.get('jax')}")
+        print(f"    compile={timings.get('compile_s')}s{cached}"
+              f" execute={timings.get('execute_s')}s"
+              f" amortized={amortized:.6f}s/point")
+    if not timed:
+        print("  no records carry timings (store predates telemetry); "
+              "re-run with --no-resume to refresh")
+        return
+    # Per-experiment compile tax, each batched program counted once.
+    from .runner import StudyResult
+    by_name = {e.name: e for e in specs}
+    summary = StudyResult(
+        experiments=[by_name[r.experiment] for r in records.values()
+                     if r.experiment in by_name],
+        results=list(records.values()), executed=0, restored=len(records),
+        backend="").telemetry()
+    if summary:
+        print("compile tax per experiment (batched programs counted once):")
+        for name, t in summary.items():
+            print(f"  {name}: {t['programs']} program(s), {t['points']} "
+                  f"point(s), compile={t['compile_s']}s "
+                  f"execute={t['execute_s']}s")
+
+
+def cmd_trace(args) -> int:
+    if args.action != "export":
+        raise SystemExit(f"unknown trace action {args.action!r}")
+    from repro.obs import (TraceConfig, export_perfetto,
+                           replay_trace_events)
+    spec_path = _resolve_spec_arg(args.spec)
+    study = Study(spec_path)
+    by_name = {e.name: e for e in study.experiments}
+    if args.experiment is not None:
+        if args.experiment not in by_name:
+            raise SystemExit(
+                f"no experiment named {args.experiment!r} in {spec_path}; "
+                f"have: {', '.join(sorted(by_name))}")
+        exp = by_name[args.experiment]
+    elif len(by_name) == 1:
+        exp = study.experiments[0]
+    else:
+        raise SystemExit(
+            f"{spec_path} holds {len(by_name)} experiments; pick one with "
+            f"--experiment: {', '.join(sorted(by_name))}")
+
+    from repro.sim.engine import simulate
+    topo, tf = study._resolve(exp)
+    load, seed = exp.points()[0]
+    cfg = TraceConfig(stride=args.stride, max_samples=args.max_samples,
+                      packets=args.packets)
+    engine_kw = dict(exp.engine)
+    engine_kw["trace"] = cfg
+
+    def run(backend: str):
+        traffic = tf(load, seed)
+        cycles = (exp.sweep.cycles if exp.sweep.cycles is not None
+                  else max(traffic.horizon, 1))
+        warmup = (exp.sweep.warmup if exp.sweep.warmup is not None
+                  else 0 if traffic.workload is not None else cycles // 4)
+        t0 = time.time()
+        stats = simulate(topo, exp.routing.make(), traffic,
+                         terminals=exp.terminals, cycles=cycles,
+                         warmup=warmup, seed=seed, backend=backend,
+                         **engine_kw)
+        print(f"{backend}: {stats.trace.num_samples} samples in "
+              f"{time.time() - t0:.2f}s "
+              f"(timing: {stats.timing})")
+        return stats
+
+    backends = (["numpy", "jax"] if args.backend == "both"
+                else [args.backend])
+    runs = {be: run(be) for be in backends}
+    if args.backend == "both":
+        a, b = runs["numpy"].trace, runs["jax"].trace
+        if not a.equals(b):
+            raise SystemExit(
+                f"cross-engine trace mismatch on {exp.name!r}: "
+                f"{a.diff_summary(b)}")
+        print("cross-engine traces agree exactly")
+    # The numpy run carries packet spans; prefer it for the export.
+    stats = runs.get("numpy") or runs[backends[0]]
+    out_path = args.out if args.out is not None else \
+        f"trace-{exp.name.replace('/', '-')}.json"
+    payload = export_perfetto(out_path,
+                              replay_trace_events(stats, topo=topo))
+    print(f"wrote {out_path} ({len(payload['traceEvents'])} events) — "
+          f"load it in ui.perfetto.dev")
+    if stats.completion_cycles is not None and stats.ideal_cycles:
+        print(f"completion={stats.completion_cycles} "
+              f"ideal={stats.ideal_cycles} "
+              f"ratio={stats.completion_cycles / stats.ideal_cycles:.3f}")
     return 0
 
 
@@ -116,7 +246,34 @@ def main(argv=None) -> int:
 
     show = sub.add_parser("show", help="expand a spec without running")
     show.add_argument("spec", help="spec file path or bundled spec name")
+    show.add_argument("--trace", action="store_true",
+                      help="also print stored provenance/timing records "
+                           "and the per-experiment compile tax")
+    show.add_argument("--store", default=None,
+                      help="result store to read with --trace "
+                           "(default: <spec>.results.jsonl)")
     show.set_defaults(fn=cmd_show)
+
+    trace = sub.add_parser(
+        "trace", help="run one experiment with tracing and export it")
+    trace.add_argument("action", choices=["export"])
+    trace.add_argument("spec", help="spec file path or bundled spec name")
+    trace.add_argument("--experiment", default=None,
+                       help="experiment name within the spec (required "
+                            "unless the spec holds exactly one)")
+    trace.add_argument("--backend", default="numpy",
+                       choices=["numpy", "jax", "both"],
+                       help="'both' runs both engines and fails unless "
+                            "their traces agree exactly")
+    trace.add_argument("--stride", type=int, default=1,
+                       help="sample every k-th cycle")
+    trace.add_argument("--max-samples", type=int, default=4096)
+    trace.add_argument("--packets", type=int, default=0,
+                       help="follow K sampled packets hop-by-hop "
+                            "(numpy engine only)")
+    trace.add_argument("--out", default=None,
+                       help="output path (default: trace-<experiment>.json)")
+    trace.set_defaults(fn=cmd_trace)
 
     specs = sub.add_parser("specs", help="list bundled spec files")
     specs.set_defaults(fn=cmd_specs)

@@ -137,6 +137,46 @@ class StudyResult:
             }
         return out
 
+    def telemetry(self) -> dict[str, dict]:
+        """Compile-vs-execute telemetry per experiment, deduplicated.
+
+        A batched compiled experiment shares one timing dict across its
+        grid points, so the sum here counts each program once, not once
+        per point.  ``compile_s``/``execute_s`` are program totals;
+        ``points`` is the grid points they covered (restored points
+        contribute their stored provenance timings, if any).
+        """
+        out: dict[str, dict] = {}
+        for exp in self.experiments:
+            seen: list[dict] = []
+            points = 0
+            for r in self.results:
+                if r.experiment != exp.name:
+                    continue
+                timing = (r.provenance or {}).get("timings")
+                if timing is None and r.stats is not None:
+                    timing = r.stats.timing
+                if timing is None:
+                    continue
+                points += 1
+                # A batched program's dict is one shared object across
+                # its fresh points; restored points get value-equal
+                # copies from JSON (wall-clock values to 6 decimals make
+                # distinct programs with equal dicts improbable).
+                if not any(t is timing or t == timing for t in seen):
+                    seen.append(timing)
+            if seen:
+                out[exp.name] = {
+                    "backend": seen[0].get("backend"),
+                    "programs": len(seen),
+                    "points": points,
+                    "compile_s": round(sum(t.get("compile_s", 0.0)
+                                           for t in seen), 6),
+                    "execute_s": round(sum(t.get("execute_s", 0.0)
+                                           for t in seen), 6),
+                }
+        return out
+
     def table(self) -> str:
         from repro.sim.report import format_table
         return format_table(self.results)

@@ -15,6 +15,7 @@ import os
 from dataclasses import dataclass, field, fields
 from typing import Iterable, Mapping
 
+from repro.obs.telemetry import provenance
 from repro.sim.metrics import RunStats
 
 __all__ = ["Result", "JsonlStore"]
@@ -48,6 +49,9 @@ class Result:
     link_util_mean: float
     link_util_cv: float
     saturated: bool
+    #: Packets still in fabric queues when the run stopped (0 on a
+    #: drained run); defaulted so records from older stores load.
+    in_flight_at_end: int = 0
     #: Hash of the experiment spec that produced this record (see
     #: :meth:`repro.studies.spec.ExperimentSpec.digest`); ``""`` for
     #: inline specs and records from older stores.
@@ -59,6 +63,10 @@ class Result:
     ideal_cycles: int | None = None
     #: Per-phase durations in cycles.
     phase_cycles: list | None = None
+    #: Environment + timing block (:func:`repro.obs.telemetry.provenance`):
+    #: host, library versions, and the point's compile-vs-execute split.
+    #: ``None`` for records from older stores.
+    provenance: dict | None = None
     #: The full in-memory stats of a freshly executed point (histograms,
     #: raw link loads).  ``None`` for points restored from a store.
     stats: RunStats | None = field(default=None, compare=False, repr=False)
@@ -86,11 +94,14 @@ class Result:
             link_util_mean=round(float(stats.link_util_mean), 4),
             link_util_cv=round(float(stats.link_util_cv), 4),
             saturated=bool(stats.saturated),
+            in_flight_at_end=int(stats.in_flight_at_end),
             spec_digest=spec_digest,
             completion_cycles=stats.completion_cycles,
             ideal_cycles=stats.ideal_cycles,
             phase_cycles=(list(stats.phase_cycles)
                           if stats.phase_cycles is not None else None),
+            provenance=provenance(stats.timing, backend=backend,
+                                  spec_digest=spec_digest),
             stats=stats)
 
     def record(self) -> dict:
