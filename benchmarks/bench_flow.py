@@ -1,0 +1,128 @@
+"""Flow-backend scale: grid points the cycle engines cannot reach.
+
+Solves one uniform-traffic grid point and a saturation-knee bisection
+on ~1k/4k/10k-switch Dragonfly and HyperX fabrics with the
+:mod:`repro.flow` fair-share model, recording wall-seconds (topology
+build vs per-point solve, separately — the Python-loop topology builds
+dominate at 10k and are amortized across a study's grid by the
+``Study`` topology cache) and the predicted saturation load.
+
+Results land in a ``flow_scale`` block of ``benchmarks/BENCH_sim.json``
+(appended to the artifact ``bench_simulation`` writes — run this module
+after it, as ``benchmarks/run.py`` does).  The headline acceptance
+number is ``max_point_seconds``: a 10k-switch grid point must solve in
+under 10 seconds.  Quick mode (CI) keeps the ~1k fabrics only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.flow import FlowParams, pattern_demands, saturation_load, \
+    solve_flows
+from repro.sim.topology import dragonfly_topology, hyperx_topology
+
+from .common import quick, row
+
+_ARTIFACT = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
+
+TERMINALS = 16
+POINT_LOAD = 0.6        # the single timed grid point's offered load
+
+#: (label, builder) per scale tier; quick mode keeps the ~1k tier.
+FABRICS = [
+    ("dragonfly-1k", lambda: dragonfly_topology(DragonflyConfig(
+        group_size=16, terminals_per_switch=TERMINALS,
+        global_ports_per_switch=8, num_groups=64))),
+    ("hyperx-1k", lambda: hyperx_topology(HyperXConfig(
+        dims=(32, 32), terminals=TERMINALS))),
+    ("dragonfly-4k", lambda: dragonfly_topology(DragonflyConfig(
+        group_size=16, terminals_per_switch=TERMINALS,
+        global_ports_per_switch=16, num_groups=256))),
+    ("hyperx-4k", lambda: hyperx_topology(HyperXConfig(
+        dims=(64, 64), terminals=TERMINALS))),
+    ("dragonfly-10k", lambda: dragonfly_topology(DragonflyConfig(
+        group_size=32, terminals_per_switch=TERMINALS,
+        global_ports_per_switch=10, num_groups=313))),
+    ("hyperx-10k", lambda: hyperx_topology(HyperXConfig(
+        dims=(100, 100), terminals=TERMINALS, instance="circle"))),
+]
+
+
+def _bench_fabric(label: str, build) -> dict:
+    params = FlowParams()
+    t0 = time.perf_counter()
+    topo = build()
+    build_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    src, dst, rate = pattern_demands(topo, "uniform", POINT_LOAD,
+                                     TERMINALS, params, None)
+    sol = solve_flows(topo, "minimal", src, dst, rate, params=params)
+    point_s = time.perf_counter() - t0
+    accepted = sol.delivered_rate / (topo.num_switches * TERMINALS)
+    t0 = time.perf_counter()
+    # Coarse bisection: the knee to ~0.05 per-terminal load, each probe
+    # one full solve on the (cached) topology.
+    knee = saturation_load(topo, routing="minimal", pattern="uniform",
+                           terminals=TERMINALS, params=params,
+                           lo=0.05, hi=1.0, tol=0.05)
+    knee_s = time.perf_counter() - t0
+    return {
+        "fabric": label,
+        "topology": topo.name,
+        "switches": int(topo.num_switches),
+        "endpoints": int(topo.num_switches * TERMINALS),
+        "build_s": round(build_s, 4),
+        "point_s": round(point_s, 4),
+        "point_load": POINT_LOAD,
+        "point_accepted": round(accepted, 4),
+        "saturation_load": knee,
+        "saturation_search_s": round(knee_s, 4),
+    }
+
+
+def rows():
+    out = []
+    fabrics = [f for f in FABRICS if f[0].endswith("-1k")] if quick() \
+        else FABRICS
+    results = [_bench_fabric(label, build) for label, build in fabrics]
+    max_point = max(r["point_s"] for r in results)
+    block = {
+        "quick": quick(),
+        "terminals": TERMINALS,
+        "routing": "minimal",
+        "pattern": "uniform",
+        "rows": results,
+        "max_point_seconds": round(max_point, 4),
+    }
+    payload = {}
+    if os.path.exists(_ARTIFACT):
+        with open(_ARTIFACT) as f:
+            payload = json.load(f)
+    payload["flow_scale"] = block
+    with open(_ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    # Recorded either way; a regression still fails the bench loudly.
+    assert max_point < 10.0, (
+        f"flow grid point exceeded the 10s budget: {block}")
+    for r in results:
+        out.append(row(
+            f"sim/flow/{r['fabric']}", r["point_s"] * 1e6,
+            f"switches={r['switches']} knee={r['saturation_load']} "
+            f"build_s={r['build_s']} point_s={r['point_s']}"))
+    out.append(row("sim/flow/max_point", max_point * 1e6,
+                   f"budget_s=10 quick={quick()}"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -119,6 +119,13 @@ class Fabric(abc.ABC):
         ``ideal_cycles``), so ``stats.completion_cycles ==
         stats.ideal_cycles`` *is* the paper's contention-freedom claim,
         measured under queueing.
+
+        ``backend`` is any :func:`repro.sim.engine.simulate` backend:
+        ``"numpy"`` / ``"jax"`` measure the replay cycle-accurately;
+        ``"flow"`` estimates it analytically from per-phase link
+        multiplicities (:mod:`repro.flow`) — exact for contention-free
+        LACIN schedules and within tolerance on serialized ones, at any
+        fabric scale.
         """
         from repro.sim.workloads import collective_workload
         from repro.sim.workloads import replay as replay_workload

@@ -399,6 +399,12 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
       equivalent, not bit-identical (arbitration tie-breaks draw from a
       different RNG).  Prefer :func:`repro.sim.xengine.sweep` when running
       many (load, seed) points — it batches them into one program.
+    * ``"flow"``  — the analytical fair-share model (:mod:`repro.flow`):
+      a different *fidelity tier*, not another cycle engine.  Rates and
+      replay completion are cross-validated estimates; latency fields
+      are hop-count lower bounds, and queue-level knobs
+      (``queue_capacity``, ``num_vcs``, ``eject_bw``, ``seed``,
+      ``trace``) are accepted but ignored.  Scales to 10k+ switches.
 
     ``trace`` turns on time-series recording (anything
     :meth:`repro.obs.TraceConfig.coerce` accepts: ``True``, a config, or
@@ -413,9 +419,13 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
             num_vcs=num_vcs, queue_capacity=queue_capacity, cycles=cycles,
             warmup=warmup, drain=drain, max_cycles=max_cycles, seed=seed,
             trace=trace)
+    if backend == "flow":
+        from repro.flow import simulate_flow
+        return simulate_flow(topo, policy, traffic, terminals=terminals,
+                             cycles=cycles, warmup=warmup)
     if backend != "numpy":
         raise ValueError(f"unknown simulator backend {backend!r}; "
-                         f"expected 'numpy' or 'jax'")
+                         f"expected 'numpy', 'jax' or 'flow'")
     eng = Engine(topo, policy, traffic, terminals=terminals,
                  eject_bw=eject_bw, num_vcs=num_vcs,
                  queue_capacity=queue_capacity, seed=seed, trace=trace)

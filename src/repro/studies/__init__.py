@@ -5,9 +5,10 @@ serializable :class:`ExperimentSpec` (fabric x traffic x routing x sweep
 grid) executed by a :class:`Study`, which auto-selects the simulator
 backend (batching each grid into a single compiled
 :mod:`repro.sim.xengine` program when JAX is available, looping the
-numpy oracle otherwise), streams unified :class:`Result` records to a
-JSONL store, and resumes interrupted grids by skipping the keys already
-persisted.
+numpy oracle otherwise, and escalating to the :mod:`repro.flow`
+fair-share model for fabrics of :data:`FLOW_AUTO_SWITCHES` = 1024+
+switches), streams unified :class:`Result` records to a JSONL store,
+and resumes interrupted grids by skipping the keys already persisted.
 
 Quickstart::
 
@@ -42,12 +43,14 @@ import os
 from .spec import (ExperimentSpec, FabricSpec, RoutingSpec, SweepSpec,
                    TrafficSpec, dump_specs, load_specs)
 from .store import JsonlStore, Result
-from .runner import Study, StudyResult, jax_available
+from .runner import (BACKENDS, FLOW_AUTO_SWITCHES, Study, StudyResult,
+                     jax_available)
 
 __all__ = [
     "ExperimentSpec", "FabricSpec", "TrafficSpec", "RoutingSpec",
     "SweepSpec", "load_specs", "dump_specs",
     "Result", "JsonlStore", "Study", "StudyResult", "jax_available",
+    "BACKENDS", "FLOW_AUTO_SWITCHES",
     "bundled_specs", "bundled_spec_path", "resolve_spec_source",
 ]
 

@@ -35,7 +35,7 @@ import os
 import sys
 import time
 
-from . import (JsonlStore, Study, bundled_specs, load_specs,
+from . import (BACKENDS, JsonlStore, Study, bundled_specs, load_specs,
                resolve_spec_source)
 
 
@@ -77,10 +77,18 @@ def cmd_run(args) -> int:
                   f"ideal={rp['ideal']} ratio={rp['ratio']}")
     if len(replays) < len(out.experiments):
         print("saturation points:")
-        for name, knee in out.saturation_points().items():
-            if name in replays:
-                continue
-            print(f"  {name}: {knee if knee is not None else '> max load'}")
+        try:
+            knees = [("", out.saturation_points())]
+        except ValueError:
+            # A resumed store mixing fidelity tiers: one knee per tier.
+            knees = [(f" [{tier}]", out.saturation_points(fidelity=tier))
+                     for tier in ("cycle", "flow")]
+        for suffix, tier_knees in knees:
+            for name, knee in tier_knees.items():
+                if name in replays:
+                    continue
+                print(f"  {name}{suffix}: "
+                      f"{knee if knee is not None else '> max load'}")
     return 0
 
 
@@ -236,8 +244,7 @@ def main(argv=None) -> int:
     run.add_argument("--store", default=None,
                      help="JSONL result store (default: <spec>.results.jsonl"
                           " in the current directory)")
-    run.add_argument("--backend", default="auto",
-                     choices=["auto", "jax", "numpy"])
+    run.add_argument("--backend", default="auto", choices=list(BACKENDS))
     run.add_argument("--no-resume", action="store_true",
                      help="re-run every grid point even if already stored")
     run.add_argument("--table", action="store_true",

@@ -30,7 +30,19 @@ from typing import Sequence
 from .spec import ExperimentSpec, load_specs
 from .store import JsonlStore, Result
 
-__all__ = ["Study", "StudyResult", "jax_available"]
+__all__ = ["BACKENDS", "FLOW_AUTO_SWITCHES", "Study", "StudyResult",
+           "jax_available"]
+
+#: The valid ``backend=`` values, in the order the CLI offers them —
+#: the single source of truth shared by :func:`_select_backend` and
+#: ``python -m repro.studies run --backend``.
+BACKENDS = ("auto", "jax", "numpy", "flow")
+
+#: ``backend="auto"`` escalates to the flow model at or above this many
+#: switches: the cycle engines' per-point cost grows with N x cycles
+#: and tops out around a few hundred switches, while the flow model
+#: holds single-digit seconds past 10k (see benchmarks/bench_flow.py).
+FLOW_AUTO_SWITCHES = 1024
 
 
 def jax_available() -> bool:
@@ -41,12 +53,15 @@ def jax_available() -> bool:
         return False
 
 
-def _select_backend(backend: str | None) -> str:
+def _select_backend(backend: str | None, *,
+                    num_switches: int | None = None) -> str:
     if backend in (None, "auto"):
+        if num_switches is not None and num_switches >= FLOW_AUTO_SWITCHES:
+            return "flow"
         return "jax" if jax_available() else "numpy"
-    if backend not in ("jax", "numpy"):
+    if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
-                         f"expected 'auto', 'jax' or 'numpy'")
+                         f"expected one of {BACKENDS}")
     return backend
 
 
@@ -88,7 +103,20 @@ class StudyResult:
         return [[by_key[exp.key(load, seed)] for seed in exp.sweep.seeds]
                 for load in exp.sweep.loads]
 
-    def saturation_points(self, threshold: float = 0.95
+    def fidelities(self) -> dict[str, str]:
+        """Per experiment: the fidelity tier of its records — ``"cycle"``
+        (packet-level engines), ``"flow"`` (the analytical model), or
+        ``"mixed"`` when a resumed store holds both."""
+        out: dict[str, str] = {}
+        for exp in self.experiments:
+            tiers = {getattr(r, "fidelity", "cycle") or "cycle"
+                     for r in self.results if r.experiment == exp.name}
+            if tiers:
+                out[exp.name] = tiers.pop() if len(tiers) == 1 else "mixed"
+        return out
+
+    def saturation_points(self, threshold: float = 0.95, *,
+                          fidelity: str | None = None
                           ) -> dict[str, float | None]:
         """Per experiment: the smallest offered load whose accepted
         throughput (seed-averaged) falls below ``threshold * offered``.
@@ -99,12 +127,41 @@ class StudyResult:
         traffic, while tolerating sub-5% sampling noise on uncongested
         points.  Returns ``None`` for experiments that never cross it
         (including collective replays, whose offered load is 0 — see
-        :meth:`replay_points` for their headline numbers)."""
+        :meth:`replay_points` for their headline numbers).
+
+        A knee averaged across fidelity tiers would belong to neither
+        model, so mixed-fidelity experiments refuse to produce one:
+        pass ``fidelity="cycle"``/``"flow"`` to pick the tier (records
+        of other tiers are ignored; experiments with no record of the
+        requested tier are omitted), or leave it ``None`` for
+        single-tier stores."""
         out = {}
         for exp in self.experiments:
+            rows = [r for r in self.results if r.experiment == exp.name]
+            if fidelity is not None:
+                rows = [r for r in rows
+                        if (getattr(r, "fidelity", "cycle") or "cycle")
+                        == fidelity]
+                if not rows:
+                    continue
+            else:
+                tiers = {getattr(r, "fidelity", "cycle") or "cycle"
+                         for r in rows}
+                if len(tiers) > 1:
+                    raise ValueError(
+                        f"experiment {exp.name!r} holds records of mixed "
+                        f"fidelities {sorted(tiers)}; their knees are not "
+                        f"comparable — pass fidelity='cycle' or "
+                        f"fidelity='flow' to saturation_points()")
+            by_key = {r.key: r for r in rows}
             knee = None
-            for load, row in zip(exp.sweep.loads, self.grid(exp.name)):
-                acc = sum(r.accepted for r in row) / max(len(row), 1)
+            for load in exp.sweep.loads:
+                row = [by_key[exp.key(load, seed)]
+                       for seed in exp.sweep.seeds
+                       if exp.key(load, seed) in by_key]
+                if not row:
+                    continue
+                acc = sum(r.accepted for r in row) / len(row)
                 if load > 0 and acc < threshold * load:
                     knee = load
                     break
@@ -188,18 +245,25 @@ class Study:
     ``store`` (a path or :class:`JsonlStore`) turns on persistence and
     resume; ``backend`` picks the engine:
 
-    * ``"auto"`` / ``None`` (default) — the compiled :mod:`repro.sim.xengine`
-      whenever ``import jax`` succeeds, else the numpy oracle.  There is
-      no result-shape difference, only speed: the compiled path batches
-      each experiment's entire (load x seed) grid into one jit program
-      (and same-shape grids across experiments share the compilation via
-      the jit cache), while numpy loops :func:`repro.sim.engine.simulate`
-      per point.
+    * ``"auto"`` / ``None`` (default) — resolved per experiment: fabrics
+      with at least :data:`FLOW_AUTO_SWITCHES` switches escalate to the
+      flow model (the cycle engines cannot reach them), smaller ones use
+      the compiled :mod:`repro.sim.xengine` whenever ``import jax``
+      succeeds, else the numpy oracle.  Between the cycle engines there
+      is no result-shape difference, only speed: the compiled path
+      batches each experiment's entire (load x seed) grid into one jit
+      program (and same-shape grids across experiments share the
+      compilation via the jit cache), while numpy loops
+      :func:`repro.sim.engine.simulate` per point.
     * ``"jax"`` — force the compiled engine (raises if jax is absent).
     * ``"numpy"`` — force the oracle; per-point results are bit-stable
       across resumes (the compiled path re-draws arbitration streams
       when a resumed batch has different geometry, so its resumed points
       are statistically — not bitwise — equivalent).
+    * ``"flow"`` — force the analytical fair-share model
+      (:mod:`repro.flow`): a different *fidelity tier* whose records
+      carry ``fidelity="flow"`` so stores stay mixable with cycle
+      results without their knees being conflated.
     """
 
     def __init__(self, experiments, *, store=None, backend: str | None = None):
@@ -233,7 +297,14 @@ class Study:
     # -- execution -----------------------------------------------------------
 
     def run(self, *, resume: bool = True) -> StudyResult:
-        backend = _select_backend(self.backend)
+        # Backend resolution is per experiment: "auto" escalates to the
+        # flow model above FLOW_AUTO_SWITCHES switches, so one study can
+        # mix a cycle-accurate CIN-16 grid with a 10k-switch flow grid.
+        resolved = {exp.name: _select_backend(
+            self.backend, num_switches=exp.fabric.num_switches)
+            for exp in self.experiments}
+        label = (next(iter(set(resolved.values())))
+                 if len(set(resolved.values())) == 1 else "mixed")
         if self.store is not None and not resume:
             self.store.clear()
         existing = (self.store.load()
@@ -241,6 +312,7 @@ class Study:
         results: list[Result] = []
         executed = restored = 0
         for exp in self.experiments:
+            backend = resolved[exp.name]
             digest = exp.digest()
             exp_results: dict[str, Result] = {}
             missing: list[tuple[float, int]] = []
@@ -270,6 +342,10 @@ class Study:
                     fresh = self._run_jax(exp, missing)
                     if self.store is not None:
                         self.store.append(fresh)
+                elif backend == "flow":
+                    fresh = self._run_flow(exp, missing)
+                    if self.store is not None:
+                        self.store.append(fresh)
                 else:           # numpy streams per point inside the loop
                     fresh = self._run_numpy(exp, missing)
                 executed += len(fresh)
@@ -278,7 +354,7 @@ class Study:
                            for load, seed in exp.points())
         return StudyResult(
             experiments=self.experiments, results=results,
-            executed=executed, restored=restored, backend=backend,
+            executed=executed, restored=restored, backend=label,
             store_path=self.store.path if self.store is not None else None)
 
     def _resolve(self, exp: ExperimentSpec):
@@ -333,6 +409,30 @@ class Study:
                                   experiment=exp.name, load=load, seed=seed,
                                   backend="jax", spec_digest=exp.digest())
                 for load, seed, stats in flat]
+
+    def _run_flow(self, exp: ExperimentSpec,
+                  missing: Sequence[tuple[float, int]]) -> list[Result]:
+        import time
+        from repro.flow import study_point_stats
+        from repro.obs.telemetry import timing_dict
+        topo, tf = self._resolve(exp)
+        t0 = time.perf_counter()
+        batch = [(load, seed,
+                  study_point_stats(exp, topo, tf, load, seed))
+                 for load, seed in missing]
+        # One timing dict shared across the batch, like the compiled
+        # path: the flow model has no compile step, only execute.
+        timing = timing_dict("flow",
+                             execute_s=time.perf_counter() - t0,
+                             grid_points=len(batch))
+        out = []
+        for load, seed, stats in batch:
+            stats.timing = timing
+            out.append(Result.from_stats(
+                stats, key=exp.key(load, seed), experiment=exp.name,
+                load=load, seed=seed, backend="flow",
+                spec_digest=exp.digest(), fidelity="flow"))
+        return out
 
     def _run_numpy(self, exp: ExperimentSpec,
                    missing: Sequence[tuple[float, int]]) -> list[Result]:

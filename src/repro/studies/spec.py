@@ -167,6 +167,25 @@ class FabricSpec(_SpecBase):
         return topo
 
     @property
+    def num_switches(self) -> int | None:
+        """Fabric size without resolving the topology — the cheap input
+        to backend auto-selection (``None`` for unresolved inline
+        specs, whose size is unknowable declaratively)."""
+        if self._topology is not None:
+            return int(self._topology.num_switches)
+        if self.kind == "cin":
+            return int(self.params["n"])
+        if self.kind == "hyperx":
+            out = 1
+            for d in self.params.get("dims", ()):
+                out *= int(d)
+            return out
+        if self.kind == "dragonfly":
+            return (int(self.params["group_size"])
+                    * int(self.params["num_groups"]))
+        return None
+
+    @property
     def label(self) -> str:
         if self._topology is not None:
             return self._topology.name

@@ -56,6 +56,13 @@ class Result:
     #: :meth:`repro.studies.spec.ExperimentSpec.digest`); ``""`` for
     #: inline specs and records from older stores.
     spec_digest: str = ""
+    #: Simulation fidelity tier: ``"cycle"`` for the packet-level
+    #: engines (jax/numpy), ``"flow"`` for the analytical fair-share
+    #: model (:mod:`repro.flow`).  Stores may mix tiers; analyses that
+    #: compare knees must filter on this marker (see
+    #: :meth:`repro.studies.runner.StudyResult.saturation_points`).
+    #: Defaulted so records from older stores load as cycle-fidelity.
+    fidelity: str = "cycle"
     # -- collective-replay summary (None for open-loop experiments) ---------
     #: Cycle the workload's last packet delivered.
     completion_cycles: int | None = None
@@ -74,7 +81,8 @@ class Result:
     @classmethod
     def from_stats(cls, stats: RunStats, *, key: str, experiment: str,
                    load: float, seed: int, backend: str,
-                   spec_digest: str = "") -> "Result":
+                   spec_digest: str = "", fidelity: str = "cycle"
+                   ) -> "Result":
         return cls(
             key=key, experiment=experiment, load=float(load), seed=int(seed),
             backend=backend,
@@ -95,7 +103,7 @@ class Result:
             link_util_cv=round(float(stats.link_util_cv), 4),
             saturated=bool(stats.saturated),
             in_flight_at_end=int(stats.in_flight_at_end),
-            spec_digest=spec_digest,
+            spec_digest=spec_digest, fidelity=fidelity,
             completion_cycles=stats.completion_cycles,
             ideal_cycles=stats.ideal_cycles,
             phase_cycles=(list(stats.phase_cycles)
