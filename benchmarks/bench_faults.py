@@ -1,0 +1,148 @@
+"""Degraded-fabric survivability: throughput retention + table build cost.
+
+Two questions the :mod:`repro.faults` subsystem answers quantitatively:
+
+* **Throughput retention** — for each paper family at its bundled-spec
+  size, the flow-model saturation knee on the degraded fabric at
+  f ∈ {0, 1%, 5%, 10%} random link failures (seeded, ``strict`` policy
+  so nothing is dropped: the curves measure pure rerouting cost), as a
+  fraction of the pristine knee.
+* **Fallback-table build time** — wall seconds for
+  :func:`repro.faults.degrade` (connectivity check + vectorized BFS +
+  dense fallback table) at ~1k and ~4k switches, the scales the flow
+  backend sweeps routinely.
+
+Results land in a ``failure_sweep`` block of
+``benchmarks/BENCH_sim.json`` (appended to the artifact
+``bench_simulation`` writes — run after it, as ``benchmarks/run.py``
+does).  Quick mode (CI) drops the 4k build tier and coarsens the knee
+bisection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.fabric import make_fabric
+from repro.faults import FailureSpec, degrade
+from repro.flow import FlowParams, saturation_load
+from repro.sim.topology import hyperx_topology
+
+from .common import quick, row
+
+_ARTIFACT = os.path.join(os.path.dirname(__file__), "BENCH_sim.json")
+
+#: Link-failure fractions of the retention curve (the satellite's grid).
+FRACTIONS = (0.0, 0.01, 0.05, 0.1)
+FAIL_SEED = 3
+
+#: (label, terminals, builder) per paper family at bundled-spec size.
+FAMILIES = [
+    ("cin-16", 12, lambda: make_fabric("xor", 16).sim_topology()),
+    ("hyperx-256", 8, lambda: make_fabric(
+        HyperXConfig(dims=(16, 16), terminals=8)).sim_topology()),
+    ("dragonfly-72", 3, lambda: make_fabric(DragonflyConfig(
+        group_size=6, terminals_per_switch=3, global_ports_per_switch=2,
+        num_groups=12)).sim_topology()),
+]
+
+#: (label, builder) for the degraded-table build-time tiers.
+BUILD_TIERS = [
+    ("hyperx-1k", lambda: hyperx_topology(HyperXConfig(
+        dims=(32, 32), terminals=1))),
+    ("hyperx-4k", lambda: hyperx_topology(HyperXConfig(
+        dims=(64, 64), terminals=1))),
+]
+
+
+def _retention(label: str, terminals: int, build) -> dict:
+    params = FlowParams()
+    topo = build()
+    tol = 0.1 if quick() else 0.05
+    knees = {}
+    for f in FRACTIONS:
+        t = topo if f == 0 else degrade(
+            topo, FailureSpec(link_fraction=f, seed=FAIL_SEED))
+        k = saturation_load(t, routing="minimal", pattern="uniform",
+                            terminals=terminals, params=params,
+                            lo=0.05, hi=1.0, tol=tol)
+        # None = no saturation below the search ceiling; clamp to it so
+        # the retention ratio stays defined (and conservative).
+        knees[f] = 1.0 if k is None else float(k)
+    pristine = knees[0.0]
+    return {
+        "family": label,
+        "topology": topo.name,
+        "switches": int(topo.num_switches),
+        "terminals": terminals,
+        "seed": FAIL_SEED,
+        "knees": {f"{f:g}": round(k, 4) for f, k in knees.items()},
+        "retention": {f"{f:g}": round(k / pristine, 4)
+                      for f, k in knees.items()},
+    }
+
+
+def _build_time(label: str, build) -> dict:
+    topo = build()
+    spec = FailureSpec(link_fraction=0.01, seed=FAIL_SEED)
+    t0 = time.perf_counter()
+    degraded = degrade(topo, spec)
+    build_s = time.perf_counter() - t0
+    return {
+        "tier": label,
+        "switches": int(topo.num_switches),
+        "build_s": round(build_s, 4),
+        "degraded_diameter": int(degraded.diameter),
+        "pristine_diameter": int(topo.diameter),
+    }
+
+
+def rows():
+    out = []
+    families = [_retention(*fam) for fam in FAMILIES]
+    tiers = BUILD_TIERS[:1] if quick() else BUILD_TIERS
+    builds = [_build_time(label, build) for label, build in tiers]
+    block = {
+        "quick": quick(),
+        "fractions": list(FRACTIONS),
+        "routing": "minimal",
+        "pattern": "uniform",
+        "policy": "strict",
+        "families": families,
+        "table_build": builds,
+    }
+    payload = {}
+    if os.path.exists(_ARTIFACT):
+        with open(_ARTIFACT) as f:
+            payload = json.load(f)
+    payload["failure_sweep"] = block
+    with open(_ARTIFACT, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for fam in families:
+        # Retention is monotone non-increasing by construction of the
+        # knee; a violation means the fallback tables mis-route.
+        rets = [fam["retention"][f"{f:g}"] for f in FRACTIONS]
+        assert all(a >= b - 1e-9 for a, b in zip(rets, rets[1:])), (
+            f"throughput retention not monotone for {fam['family']}: {fam}")
+        out.append(row(
+            f"sim/faults/{fam['family']}", 0.0,
+            " ".join(f"f{f:g}={fam['retention'][f'{f:g}']}"
+                     for f in FRACTIONS)))
+    for b in builds:
+        out.append(row(f"sim/faults/build/{b['tier']}",
+                       b["build_s"] * 1e6,
+                       f"switches={b['switches']} build_s={b['build_s']}"))
+    return out
+
+
+def main():
+    from .common import emit
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

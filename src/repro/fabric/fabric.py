@@ -107,7 +107,8 @@ class Fabric(abc.ABC):
 
     def replay(self, collective: str = "all_to_all", *,
                message_size: int = 1, policy="minimal",
-               backend: str = "numpy", seed: int = 0, **engine_kw):
+               backend: str = "numpy", seed: int = 0, failures=None,
+               **engine_kw):
         """Replay one of this fabric's own collective schedules through
         the packet simulator (:mod:`repro.sim.workloads`).
 
@@ -126,12 +127,20 @@ class Fabric(abc.ABC):
         multiplicities (:mod:`repro.flow`) — exact for contention-free
         LACIN schedules and within tolerance on serialized ones, at any
         fabric scale.
+
+        ``failures`` (a :class:`repro.faults.FailureSpec`) measures
+        collective completion on the *degraded* fabric: schedule steps
+        still replay phase by phase, but traffic at dead or disconnected
+        endpoints is masked out and surviving traffic reroutes over the
+        fallback tables — the completion/ideal ratio then quantifies how
+        much of the schedule's contention-freedom survives the failures.
         """
         from repro.sim.workloads import collective_workload
         from repro.sim.workloads import replay as replay_workload
         w = collective_workload(self, collective, message_size=message_size)
         return replay_workload(self.sim_topology(), policy, w,
-                               backend=backend, seed=seed, **engine_kw)
+                               backend=backend, seed=seed,
+                               failures=failures, **engine_kw)
 
     @abc.abstractmethod
     def link_loads(self, traffic="uniform") -> dict:

@@ -133,8 +133,33 @@ def _valiant_problem(topo, src, dst, rate,
     hi = np.maximum(s, d)
     mid = raw + (raw >= lo)
     mid += (mid >= hi)
+    demand = np.repeat(rate / m, m)
+    faults = (topo.meta or {}).get("faults")
+    if faults is not None:
+        # Degraded fabric: only mids alive and in the source's component
+        # can relay.  Drop the rest and renormalize each pair's split
+        # over its surviving mids; pairs with no surviving mid at all
+        # route minimally (the same collapse the cycle engines apply).
+        comp = faults["comp"]
+        keep = comp[mid] == comp[s]
+        if not keep.all():
+            pair = np.repeat(np.arange(F), m)[keep]
+            counts = np.bincount(pair, minlength=F)
+            s, d, mid = s[keep], d[keep], mid[keep]
+            demand = rate[pair] / np.maximum(counts[pair], 1)
+            parts = []
+            if s.size:
+                link_ids, ptr = trace_routes_via(topo, s, mid, d)
+                parts.append(FlowProblem(
+                    demand=demand, link_ids=link_ids, flow_ptr=ptr,
+                    injection=_injection_mask(ptr), src=s, dst=d))
+            lost = counts == 0
+            if lost.any():
+                parts.append(_minimal_problem(topo, src[lost], dst[lost],
+                                              rate[lost]))
+            return _concat_problems(parts)
     link_ids, ptr = trace_routes_via(topo, s, mid, d)
-    return FlowProblem(demand=np.repeat(rate / m, m),
+    return FlowProblem(demand=demand,
                        link_ids=link_ids, flow_ptr=ptr,
                        injection=_injection_mask(ptr), src=s, dst=d)
 
@@ -182,8 +207,20 @@ def _adaptive_problem(topo, src, dst, rate,
 
 def solve_flows(topo: SimTopology, routing: str, src, dst, rate, *,
                 params: FlowParams | None = None) -> FlowSolution:
-    """Build and solve the flow problem for one demand matrix."""
+    """Build and solve the flow problem for one demand matrix.
+
+    On a degraded topology (:func:`repro.faults.degrade`), demand
+    entries whose endpoints died or were disconnected are dropped here —
+    the one choke point every demand source (analytic patterns,
+    empirical traffic, direct calls) passes through — mirroring the
+    packet masking the cycle engines apply.  Offered load stays measured
+    against the pristine switch count, so throughput retention curves
+    read directly as survivability.
+    """
     params = params or FlowParams()
+    if (topo.meta or {}).get("faults") is not None:
+        from repro.faults import filter_pairs
+        src, dst, rate = filter_pairs(topo, src, dst, rate)
     if routing == "minimal":
         problem = _minimal_problem(topo, src, dst, rate)
     elif routing == "valiant":

@@ -140,9 +140,23 @@ def trace_routes(topo: SimTopology, src: np.ndarray,
             break
         c = cur[pending]
         port = np.asarray(topo.minimal_port(c, dst[pending]))
+        nxt = topo.neighbor[c, port]
+        if (nxt < 0).any():
+            # Only reachable on degraded fabrics: the fallback table
+            # gives port 0 for unreachable pairs and port 0 may be dead.
+            # Raise here, by name, rather than let the -1 wrap into a
+            # wandering walk that fails the convergence check cryptically.
+            bad = nxt < 0
+            raise RuntimeError(
+                f"route tracing on {topo.name} stepped onto an unwired "
+                f"port for {int(bad.sum())} pair(s) (first: switch "
+                f"{int(c[bad][0])} -> {int(dst[pending][bad][0])}); on a "
+                f"degraded fabric this means the pair is unreachable — "
+                f"filter demands with repro.faults.filter_pairs (policy="
+                f"'drop') or use a connected FailureSpec")
         hops_f.append(pending.copy())
         hops_l.append(c * topo.num_ports + port)
-        cur[pending] = topo.neighbor[c, port]
+        cur[pending] = nxt
     else:
         left = pending[cur[pending] != dst[pending]]
         if left.size:

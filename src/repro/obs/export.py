@@ -36,6 +36,13 @@ def link_classes(topo) -> dict[str, np.ndarray]:
     endpoints sit in different groups are ``"global"`` — the scarce
     wires whose serialization the replay measures.  Unwired slots (port
     not connected) are in neither class.
+
+    On a degraded topology (built by :func:`repro.faults.degrade`) a
+    third ``"rerouted"`` class carries the surviving links the fallback
+    table press-ganged onto paths their pristine routes never used —
+    the detour wires whose extra load explains a degraded replay's
+    stretch.  The classes stay disjoint: a rerouted slot is subtracted
+    from ``local``/``global``.
     """
     n, p = topo.num_switches, topo.num_ports
     from repro.sim.link import LinkTable
@@ -44,13 +51,21 @@ def link_classes(topo) -> dict[str, np.ndarray]:
     wired = nbr >= 0
     switch_of = np.arange(n * p) // p
     meta = getattr(topo, "meta", {}) or {}
+    faults = meta.get("faults")
+    rerouted = (wired & np.asarray(faults["rerouted"], dtype=bool)
+                if faults is not None else None)
     cfg = meta.get("config")
     group_size = getattr(cfg, "group_size", None)
     if group_size:
         crosses = wired & (switch_of // group_size
                            != np.maximum(nbr, 0) // group_size)
-        return {"local": wired & ~crosses, "global": crosses}
-    return {"local": wired}
+        out = {"local": wired & ~crosses, "global": crosses}
+    else:
+        out = {"local": wired}
+    if rerouted is not None:
+        out = {cls: mask & ~rerouted for cls, mask in out.items()}
+        out["rerouted"] = rerouted
+    return out
 
 
 def replay_trace_events(stats, *, topo=None, validate: bool = True

@@ -287,7 +287,13 @@ class Engine:
         r_cls = np.concatenate([np.zeros(nt, np.int64),
                                 np.ones(ip.size, np.int64)])
         r_dq = links.dest_queue(r_link, r_vc)
-        feasible = np.nonzero(fab.occ[r_dq] < cap)[0]
+        # Unwired slots (including links a FailureSpec killed) have no
+        # downstream queue — they are permanently credit-starved.
+        # Degraded fallback routing never requests them, so this guard
+        # never fires on well-formed traffic; it keeps stray requests
+        # from indexing a garbage queue.
+        feasible = np.nonzero((fab.occ[r_dq] < cap)
+                              & links.wired[r_link])[0]
         if feasible.size == 0:
             self.cycle += 1
             return
@@ -385,12 +391,19 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
              cycles: int | None = None,
              warmup: int = 0, drain: bool | None = None,
              max_cycles: int | None = None, seed: int = 0,
-             backend: str = "numpy", trace=None) -> RunStats:
+             backend: str = "numpy", trace=None, failures=None) -> RunStats:
     """Run one simulation; ``backend`` picks the engine.
 
     ``terminals`` defaults to what the traffic object was generated with
     (:func:`repro.sim.traffic.resolve_terminals`); passing a disagreeing
     explicit value raises.
+
+    ``failures`` (a :class:`repro.faults.FailureSpec`, or its dict form)
+    runs the simulation on the degraded fabric: the topology is masked
+    and re-routed via :func:`repro.faults.degrade` and packets whose
+    endpoints died or were disconnected are dropped from ``traffic``
+    before the engine ever sees them — uniformly for all three backends.
+    ``None`` (or a null spec) is exactly the pristine run.
 
     * ``"numpy"`` — the interpreted oracle :class:`Engine` (one Python
       iteration per cycle; reference semantics).
@@ -412,6 +425,10 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
     ``stats.trace``.  Both backends also stamp ``stats.timing`` with the
     run's wall-clock (and, for ``"jax"``, compile-vs-execute) split.
     """
+    if failures is not None:
+        from repro.faults import degrade, mask_traffic
+        topo = degrade(topo, failures)
+        traffic = mask_traffic(traffic, topo)
     if backend == "jax":
         from . import xengine
         return xengine.simulate_jax(

@@ -38,7 +38,14 @@ class MinimalPolicy(RoutingPolicy):
 
 
 def _sample_mid(state, pids: np.ndarray) -> np.ndarray:
-    """Uniform intermediate switch avoiding {src, dst} (shift-remap)."""
+    """Uniform intermediate switch avoiding {src, dst} (shift-remap).
+
+    On a degraded topology (``meta["faults"]``), mids that died or fell
+    outside the source's component collapse to the destination — the
+    packet routes minimally instead of detouring into a black hole.  The
+    RNG draw happens unconditionally, so pristine runs consume the exact
+    same stream (bit-identical behavior with no failures).
+    """
     n = state.topo.num_switches
     s = state.src[pids]
     d = state.dst[pids]
@@ -47,6 +54,10 @@ def _sample_mid(state, pids: np.ndarray) -> np.ndarray:
     r = state.rng.integers(0, n - 2, size=pids.size)
     r = r + (r >= lo)
     r = r + (r >= hi)
+    faults = (state.topo.meta or {}).get("faults")
+    if faults is not None:
+        comp = faults["comp"]
+        r = np.where(comp[r] == comp[s], r, d)
     return r
 
 
@@ -61,8 +72,13 @@ class ValiantPolicy(RoutingPolicy):
         if state.topo.num_switches < 3 or pids.size == 0:
             super().on_inject(state, pids)
             return
-        state.mid[pids] = _sample_mid(state, pids)
-        state.phase[pids] = 0
+        mid = _sample_mid(state, pids)
+        state.mid[pids] = mid
+        # A collapsed mid (degraded fabric) is already the destination:
+        # skip phase 0 so the packet ejects on arrival.  Pristine mids
+        # never equal the destination (shift-remap), so this is the
+        # unconditional ``phase = 0`` of the pristine engine.
+        state.phase[pids] = np.where(mid == state.dst[pids], 1, 0)
 
 
 class AdaptivePolicy(RoutingPolicy):
@@ -101,7 +117,10 @@ class AdaptivePolicy(RoutingPolicy):
         c_min = self._congestion(state, s, state.topo.minimal_port(s, d))
         mid = _sample_mid(state, pids)
         c_val = self._congestion(state, s, state.topo.minimal_port(s, mid))
-        detour = c_min > self.weight * c_val + self.threshold
+        # On degraded fabrics _sample_mid collapses unreachable mids to
+        # the destination; treating that as "no detour" keeps the phase
+        # bookkeeping exact.  Pristine mids never equal the destination.
+        detour = (c_min > self.weight * c_val + self.threshold) & (mid != d)
         state.mid[pids] = np.where(detour, mid, d)
         state.phase[pids] = np.where(detour, 0, 1)
 

@@ -79,6 +79,16 @@ class SimTopology:
             self.__dict__["_minimal_port_table"] = tbl
         return tbl
 
+    def degrade(self, failures) -> "SimTopology":
+        """Degraded copy of this topology under a
+        :class:`repro.faults.FailureSpec` (or its dict form): dead slots
+        masked to ``-1``, ``minimal_port`` swapped for the fallback
+        next-hop table over the surviving graph, ``diameter`` re-derived.
+        A null spec (or ``None``) returns ``self`` unchanged.  See
+        :func:`repro.faults.degrade`."""
+        from repro.faults import degrade as _degrade
+        return _degrade(self, failures)
+
     def validate(self) -> None:
         """Cheap structural sanity: links pair up (A's port i reaches B,
         and B's ``rev_port`` points back at A through the same wire)."""

@@ -394,7 +394,7 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
            terminals: int | None = None, eject_bw: int | None = None,
            num_vcs: int | None = None, queue_capacity: int = 4,
            max_cycles: int | None = None, seed: int = 0,
-           trace=None) -> RunStats:
+           trace=None, failures=None) -> RunStats:
     """Replay ``workload`` on ``topo`` under ``policy``; returns the
     engine's :class:`~repro.sim.metrics.RunStats` with the replay fields
     set: ``phase_cycles`` (per-phase durations), ``completion_cycles``
@@ -402,6 +402,12 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
     contention-free bound) — ``completion_cycles >= ideal_cycles``
     always, with equality iff no phase ever left its bottleneck link
     idle or contended.
+
+    ``failures`` (a :class:`repro.faults.FailureSpec`) replays on the
+    degraded fabric: routing falls back to the surviving graph's tables
+    and pairs whose endpoints died or were disconnected are masked out
+    of every phase (phase barriers then gate on the surviving packet
+    counts, and ``ideal_cycles`` is recomputed for the masked workload).
     """
     from .engine import simulate
     from .policies import make_policy
@@ -415,4 +421,4 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
                     eject_bw=eject_bw, num_vcs=num_vcs,
                     queue_capacity=queue_capacity, warmup=0,
                     max_cycles=max_cycles, seed=seed, backend=backend,
-                    trace=trace)
+                    trace=trace, failures=failures)

@@ -139,6 +139,10 @@ class _Tables(NamedTuple):
     NT = B*N*T terminal lanes).
     """
     port_table: jax.Array        # (N, N) next-hop output port
+    comp_of_switch: jax.Array    # (N,) component label on degraded
+    #                              fabrics (-1 = dead switch); all zeros
+    #                              pristine, so the Valiant-mid collapse
+    #                              below is the identity there
     feeder_local: jax.Array      # (N*P,) local link feeding port (s,i); -1.
     #                              Read both ways: the queue behind input
     #                              port (s,i) receives from link
@@ -406,8 +410,15 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
              ).astype(_I32)
         r = r + (r >= lo)
         r = r + (r >= hi)
+        # Degraded fabrics: a mid that died or fell outside the source's
+        # component collapses to the destination (route minimally rather
+        # than detour into a black hole).  comp_of_switch is all zeros
+        # pristine, so ``ok`` is constant-True there and the collapse is
+        # the identity — same sample bits, same results.
+        ok = (tables.comp_of_switch[r] == tables.comp_of_switch[s_i])
         if spec.policy == "valiant":
-            i_mid, i_phase = r, jnp.zeros(nt_flat, _I32)
+            i_mid = jnp.where(ok, r, d_i)
+            i_phase = jnp.where(ok, 0, 1).astype(_I32)
         else:  # adaptive: congestion-threshold detour (UGAL-style)
             per_port_occ = occ.reshape(n_links, v).sum(axis=1)
             base = tables.copybase_of_term
@@ -421,7 +432,7 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
             safe_d = jnp.where(d_i != s_i, d_i, (s_i + 1) % n)
             c_min = congestion(tables.port_table[s_i, safe_d])
             c_val = congestion(tables.port_table[s_i, r])
-            detour = c_min > spec.weight * c_val + spec.threshold
+            detour = (c_min > spec.weight * c_val + spec.threshold) & ok
             i_mid = jnp.where(detour, r, d_i)
             i_phase = jnp.where(detour, 0, 1).astype(_I32)
 
@@ -455,7 +466,11 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
          (i_src * p + i_port).reshape(blocks, t)], axis=1)
     dq = ((tables.copybase_of_block[:, None]
            + tables.feeder_local[link_local_x]) * v + vc_x)
-    feas = act & (occ[dq] < cap)
+    # Unwired slots (feeder_local == -1), including links a FailureSpec
+    # killed, are permanently credit-starved: well-formed routing never
+    # requests them, and this mask keeps any stray request from reading
+    # a garbage queue's occupancy and winning arbitration on it.
+    feas = act & (tables.feeder_local[link_local_x] >= 0) & (occ[dq] < cap)
 
     # Arbitration randomness: transit lanes use the low half of their
     # lane word (the high half fed ejection); terminal lanes use the top
@@ -663,9 +678,13 @@ def _build_tables(topo: SimTopology, links: LinkTable, b: int,
     term_block = ti // t
     blk_idx = term_block                         # flat (copy, switch)
     link_ids = np.arange(b * n * p, dtype=np.int64)
+    faults = (topo.meta or {}).get("faults")
+    comp = (faults["comp"] if faults is not None
+            else np.zeros(n, dtype=np.int64))
     as_i32 = lambda a: jnp.asarray(a, _I32)  # noqa: E731
     return _Tables(
         port_table=as_i32(topo.minimal_port_table()),
+        comp_of_switch=as_i32(comp),
         feeder_local=as_i32(feeder_local),
         sw_local=as_i32((lanes % (n * pv)) // pv),
         x_of_lane=as_i32(lanes % pv),

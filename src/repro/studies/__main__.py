@@ -102,6 +102,9 @@ def cmd_show(args) -> int:
         print(exp.describe())
         print(f"    loads={list(exp.sweep.loads)} seeds={list(exp.sweep.seeds)}"
               f" warmup={exp.sweep.warmup}")
+        if exp.failures is not None:
+            print(f"    failures: {exp.failures.label} "
+                  f"(policy={exp.failures.policy})")
         print(f"    first key: {exp.key(*pts[0])}")
     print(f"{len(specs)} experiments, {total} grid points")
     if getattr(args, "trace", False):

@@ -54,15 +54,40 @@ def jax_available() -> bool:
 
 
 def _select_backend(backend: str | None, *,
-                    num_switches: int | None = None) -> str:
+                    num_switches: int | None = None,
+                    experiment: "ExperimentSpec | None" = None) -> str:
     if backend in (None, "auto"):
         if num_switches is not None and num_switches >= FLOW_AUTO_SWITCHES:
-            return "flow"
-        return "jax" if jax_available() else "numpy"
-    if backend not in BACKENDS:
+            choice = "flow"
+        else:
+            choice = "jax" if jax_available() else "numpy"
+    elif backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected one of {BACKENDS}")
-    return backend
+    else:
+        choice = backend
+    if (choice == "flow" and experiment is not None
+            and experiment.failures is not None
+            and experiment.traffic.pattern == "workload"
+            and experiment.failures.policy == "strict"):
+        # A collective replay on the flow backend traces every phase's
+        # routes through the degraded table; a disconnected residual
+        # fabric would only surface deep inside trace_routes as an
+        # unwired-port walk.  Check connectivity here, while the error
+        # can still name the experiment and the fix.
+        from repro.faults import residual_report
+        report = residual_report(experiment.fabric.resolve_topology(),
+                                 experiment.failures)
+        if not report["connected"]:
+            raise ValueError(
+                f"experiment {experiment.name!r} replays a collective on "
+                f"the flow backend, but failures "
+                f"{experiment.failures.label!r} leave the fabric in "
+                f"{report['num_components']} components and "
+                f"policy='strict' forbids dropping the stranded traffic; "
+                f"use policy='drop' to mask unreachable pairs, or pick a "
+                f"FailureSpec that keeps the fabric connected")
+    return choice
 
 
 @dataclass
@@ -301,7 +326,8 @@ class Study:
         # flow model above FLOW_AUTO_SWITCHES switches, so one study can
         # mix a cycle-accurate CIN-16 grid with a 10k-switch flow grid.
         resolved = {exp.name: _select_backend(
-            self.backend, num_switches=exp.fabric.num_switches)
+            self.backend, num_switches=exp.fabric.num_switches,
+            experiment=exp)
             for exp in self.experiments}
         label = (next(iter(set(resolved.values())))
                  if len(set(resolved.values())) == 1 else "mixed")
@@ -352,6 +378,9 @@ class Study:
                 exp_results.update((r.key, r) for r in fresh)
             results.extend(exp_results[exp.key(load, seed)]
                            for load, seed in exp.points())
+        if self.store is not None:
+            # Settle any fsyncs a flush_interval > 1 store deferred.
+            self.store.sync()
         return StudyResult(
             experiments=self.experiments, results=results,
             executed=executed, restored=restored, backend=label,
@@ -365,9 +394,33 @@ class Study:
             topo = fs.resolve_topology()
             if key is not None:
                 self._topo_cache[key] = topo
+        if exp.failures is not None:
+            # Degrade once per (fabric, FailureSpec) and cache alongside
+            # the pristine topology: a failure-rate x seed sweep shares
+            # each degraded table across its experiments' grid points.
+            from repro.faults import FabricDisconnectedError, degrade
+            fkey = (f"{key}|faults={exp.failures.to_json()}"
+                    if key is not None else None)
+            degraded = (self._topo_cache.get(fkey)
+                        if fkey is not None else None)
+            if degraded is None:
+                try:
+                    degraded = degrade(topo, exp.failures)
+                except FabricDisconnectedError as e:
+                    raise FabricDisconnectedError(
+                        f"experiment {exp.name!r}: {e}") from e
+                if fkey is not None:
+                    self._topo_cache[fkey] = degraded
+            topo = degraded
         tf = exp.traffic.factory(topo, cycles=exp.sweep.cycles,
                                  terminals=exp.terminals
                                  if exp.terminals is not None else 1)
+        if exp.failures is not None:
+            from repro.faults import mask_traffic as _mask
+            inner, masked_topo = tf, topo
+
+            def tf(load, seed):
+                return _mask(inner(load, seed), masked_topo)
         return topo, tf
 
     def _run_jax(self, exp: ExperimentSpec,

@@ -469,6 +469,14 @@ class ExperimentSpec(_SpecBase):
     :func:`repro.sim.traffic.resolve_terminals`).  ``engine`` forwards
     extra engine kwargs (``queue_capacity``, ``num_vcs``, ``eject_bw``,
     ``max_cycles``, ``drain``).
+
+    ``failures`` is an optional :class:`repro.faults.FailureSpec` (or its
+    dict form): the experiment then runs on the *degraded* fabric — the
+    topology passes through :func:`repro.faults.degrade` once per study
+    and traffic to/from dead or disconnected switches is masked before
+    injection.  ``failures=None`` (or a null spec) is byte-identical to
+    the pre-faults behaviour: the key is omitted from ``to_dict``, so
+    old spec files load unchanged and stored digests keep resuming.
     """
     fabric: FabricSpec = None
     traffic: TrafficSpec = None
@@ -477,6 +485,7 @@ class ExperimentSpec(_SpecBase):
     name: str = ""
     terminals: int | None = None
     engine: dict = field(default_factory=dict)
+    failures: Any = None
 
     def __post_init__(self):
         for fld, typ in (("fabric", FabricSpec), ("traffic", TrafficSpec),
@@ -487,10 +496,25 @@ class ExperimentSpec(_SpecBase):
             elif not isinstance(v, typ):
                 raise TypeError(f"ExperimentSpec.{fld} must be a {typ.__name__}"
                                 f" (or its dict form), got {type(v).__name__}")
+        if self.failures is not None:
+            from repro.faults import FailureSpec
+            spec = FailureSpec.coerce(self.failures)
+            object.__setattr__(self, "failures",
+                               None if spec is not None and spec.is_null
+                               else spec)
         super().__post_init__()
         if not self.name:
             object.__setattr__(self, "name", "/".join(
                 (self.fabric.label, self.traffic.label, self.routing.label)))
+
+    def to_dict(self) -> dict:
+        out = super().to_dict()
+        if out.get("failures") is None:
+            # Absent and None are the same spec; omitting the key keeps
+            # old JSON loading exactly and leaves pre-faults digests (and
+            # thus resumable stores) untouched.
+            out.pop("failures", None)
+        return out
 
     @property
     def is_inline(self) -> bool:
@@ -524,8 +548,11 @@ class ExperimentSpec(_SpecBase):
 
     def describe(self) -> str:
         s = self.sweep
-        return (f"{self.name}: {len(s.loads)} loads x {len(s.seeds)} seeds"
-                f" x {s.cycles} cycles (terminals={self.terminals})")
+        out = (f"{self.name}: {len(s.loads)} loads x {len(s.seeds)} seeds"
+               f" x {s.cycles} cycles (terminals={self.terminals})")
+        if self.failures is not None:
+            out += f" failures={self.failures.label}"
+        return out
 
     def with_sweep(self, **kw) -> "ExperimentSpec":
         """A copy with sweep fields replaced (loads, seeds, cycles, warmup)

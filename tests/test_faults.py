@@ -1,0 +1,463 @@
+"""repro.faults: failure injection, fallback routing, degraded engines.
+
+The satellite property suite runs over every ``repro.fabric`` registry
+instance: zero-failure fallback tables must be bit-identical to the
+closed-form ``minimal_port_table``, surviving pairs must route without
+ever touching a dead link, and degraded path lengths can never beat the
+pristine shortest distance.  The cross-backend tests assert the
+acceptance contract: numpy == xengine link-for-link on drained
+deterministic workloads, and no delivered packet crosses a failed link
+or switch on either cycle engine.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.fabric.mirror  # noqa: F401  (registers the mirror instance)
+from repro.core.dragonfly import DragonflyConfig
+from repro.core.hyperx import HyperXConfig
+from repro.fabric import instance_names, make_fabric
+from repro.fabric.registry import get_instance
+from repro.faults import (FabricDisconnectedError, FailureSpec,
+                          bfs_distances, build_fallback_table, degrade,
+                          failure_grid, filter_pairs, mask_traffic,
+                          mask_workload, packet_keep, residual_report)
+from repro.sim.workloads import collective_workload, replay
+from repro.studies import (ExperimentSpec, FabricSpec, RoutingSpec, Study,
+                           SweepSpec, TrafficSpec)
+from repro.studies.runner import _select_backend
+
+
+def _supported_n(name: str) -> int:
+    spec = get_instance(name)
+    for n in (16, 12, 9, 8):
+        if spec.supports(n):
+            return n
+    raise AssertionError(f"no test size for instance {name}")
+
+
+def _topos():
+    """One representative topology per family (CIN for every registry
+    instance, plus HyperX and Dragonfly compositions)."""
+    out = [(name, make_fabric(name, _supported_n(name)).sim_topology())
+           for name in instance_names()]
+    out.append(("hyperx", make_fabric(
+        HyperXConfig((4, 4), 1)).sim_topology()))
+    out.append(("dragonfly", make_fabric(
+        DragonflyConfig(4, 2, 3, 9)).sim_topology()))
+    return out
+
+TOPOS = _topos()
+
+
+def _connected_spec(topo, fraction, seed):
+    """A link-failure spec on ``topo`` whose residual graph is connected
+    (walks the seed forward until the BFS check passes)."""
+    for s in range(seed, seed + 50):
+        spec = FailureSpec(link_fraction=fraction, seed=s)
+        if residual_report(topo, spec)["connected"]:
+            return spec
+    raise AssertionError(f"no connected {fraction} spec found for "
+                         f"{topo.name}")
+
+
+# ---------------------------------------------------------------------------
+# FailureSpec: validation, canonicalization, JSON round trip.
+# ---------------------------------------------------------------------------
+
+def test_failure_spec_round_trips_exactly():
+    spec = FailureSpec(link_fraction=0.05, switch_fraction=0.02, seed=4,
+                       dead_links=((2, 1), (1, 2), (0, 3)),
+                       dead_switches=(9, 4), policy="drop")
+    rt = FailureSpec.from_json(spec.to_json())
+    assert rt == spec
+    assert rt.to_json() == spec.to_json()
+    # endpoints canonicalize to sorted deduped (min, max) pairs
+    assert spec.dead_links == ((0, 3), (1, 2))
+    assert spec.dead_switches == (4, 9)
+
+
+def test_failure_spec_validation():
+    with pytest.raises(ValueError, match="link_fraction"):
+        FailureSpec(link_fraction=1.0)
+    with pytest.raises(ValueError, match="switch_fraction"):
+        FailureSpec(switch_fraction=-0.1)
+    with pytest.raises(ValueError, match="policy"):
+        FailureSpec(policy="ignore")
+    with pytest.raises(ValueError, match="self-loop"):
+        FailureSpec(dead_links=((3, 3),))
+    with pytest.raises(TypeError):
+        FailureSpec.coerce(42)
+    assert FailureSpec.coerce(None) is None
+    assert FailureSpec.coerce({"seed": 7, "link_fraction": 0.1}) == \
+        FailureSpec(link_fraction=0.1, seed=7)
+
+
+def test_failure_spec_labels():
+    assert FailureSpec().is_null and FailureSpec().label == "f0"
+    assert FailureSpec(link_fraction=0.05, seed=3).label == "L0.05-s3"
+    assert FailureSpec(dead_switches=(1,), policy="drop").label == \
+        "ds1-drop"
+    assert not FailureSpec(dead_links=((0, 1),)).is_null
+
+
+# ---------------------------------------------------------------------------
+# Satellite property suite: every registry instance / every family.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,topo", TOPOS, ids=[t[0] for t in TOPOS])
+def test_zero_failure_table_bit_identical(family, topo):
+    """f=0 fallback tables collapse to the closed-form minimal routes."""
+    assert np.array_equal(build_fallback_table(topo),
+                          topo.minimal_port_table())
+    assert degrade(topo, None) is topo
+    assert degrade(topo, FailureSpec()) is topo
+
+
+def _walk_all_pairs(topo2):
+    """Walk every reachable pair through the degraded table; returns the
+    per-pair hop counts.  Asserts no walk touches a dead/unwired slot."""
+    n = topo2.num_switches
+    table = topo2.minimal_port_table()
+    faults = topo2.meta["faults"]
+    nbr = topo2.neighbor
+    dist = bfs_distances(nbr)
+    cur = np.arange(n)[:, None] * np.ones(n, dtype=np.int64)[None, :]
+    cols = np.arange(n)[None, :] * np.ones(n, dtype=np.int64)[:, None]
+    hops = np.zeros((n, n), dtype=np.int64)
+    reachable = dist >= 0
+    for _ in range(topo2.diameter + 1):
+        pending = (cur != cols) & reachable
+        if not pending.any():
+            break
+        port = table[cur, cols]
+        nxt = nbr[cur, port]
+        # the walk must never step onto a dead or unwired slot
+        assert (nxt[pending] >= 0).all(), topo2.name
+        assert not faults["dead_links"][cur[pending],
+                                       port[pending]].any(), topo2.name
+        cur = np.where(pending, nxt, cur)
+        hops += pending
+    assert ((cur == cols) | ~reachable).all(), \
+        f"{topo2.name}: walks unfinished after diameter rounds"
+    return hops, dist
+
+
+@pytest.mark.parametrize("family,topo", TOPOS, ids=[t[0] for t in TOPOS])
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1000),
+       fraction=st.sampled_from([0.02, 0.05, 0.1]))
+def test_degraded_routes_avoid_dead_links_and_respect_distance(
+        family, topo, seed, fraction):
+    """Surviving pairs route dead-link-free, in >= pristine-distance
+    hops, terminating within the degraded diameter."""
+    spec = FailureSpec(link_fraction=fraction, seed=seed, policy="drop")
+    topo2 = degrade(topo, spec)
+    if topo2 is topo:       # fraction rounded to zero dead links
+        return
+    hops, ddist = _walk_all_pairs(topo2)
+    pristine = bfs_distances(topo.neighbor)
+    reach = ddist >= 0
+    # degraded hops == degraded shortest distance for broken pairs and
+    # == pristine route length for intact ones; both are >= the pristine
+    # graph distance and bounded by the recorded degraded diameter
+    assert (hops[reach] >= pristine[reach]).all()
+    assert hops.max() <= topo2.diameter
+
+
+@pytest.mark.parametrize("family,topo", TOPOS, ids=[t[0] for t in TOPOS])
+def test_dead_switch_isolates_and_masks(family, topo):
+    spec = FailureSpec(dead_switches=(1,), policy="drop")
+    topo2 = degrade(topo, spec)
+    faults = topo2.meta["faults"]
+    assert not faults["alive"][1] and faults["alive"].sum() == \
+        topo.num_switches - 1
+    # every slot into or out of the dead switch is unwired
+    assert (topo2.neighbor[1] < 0).all()
+    assert not (topo2.neighbor == 1).any()
+    src = np.arange(topo.num_switches)
+    keep = packet_keep(topo2, src, np.roll(src, 1))
+    assert not keep[1] and not keep[(np.roll(src, 1) == 1)].any()
+
+
+def test_explicit_dead_link_masks_both_directions():
+    topo = make_fabric("xor", 16).sim_topology()
+    topo2 = degrade(topo, FailureSpec(dead_links=((2, 9),)))
+    assert not (topo2.neighbor[2] == 9).any()
+    assert not (topo2.neighbor[9] == 2).any()
+    with pytest.raises(ValueError, match="does not exist"):
+        degrade(topo, FailureSpec(dead_links=((0, topo.num_switches - 1),
+                                              (1, 1 + 64))))
+
+
+def test_strict_disconnection_raises_with_component_sizes():
+    topo = make_fabric("xor", 16).sim_topology()
+    iso = tuple((0, j) for j in range(1, 16))
+    with pytest.raises(FabricDisconnectedError, match="2 components"):
+        degrade(topo, FailureSpec(dead_links=iso))
+    topo2 = degrade(topo, FailureSpec(dead_links=iso, policy="drop"))
+    faults = topo2.meta["faults"]
+    assert faults["num_components"] == 2
+    assert faults["unreachable_pairs"] == 2 * 15      # 0 <-> everyone
+    rep = residual_report(topo, FailureSpec(dead_links=iso))
+    assert not rep["connected"] and rep["num_components"] == 2
+
+
+def test_degrading_a_degraded_topology_is_rejected():
+    topo = make_fabric("xor", 16).sim_topology()
+    topo2 = degrade(topo, FailureSpec(link_fraction=0.05, seed=3))
+    with pytest.raises(ValueError, match="already degraded"):
+        degrade(topo2, FailureSpec(link_fraction=0.01))
+
+
+# ---------------------------------------------------------------------------
+# Cycle engines: numpy == xengine, and no dead-link traversal.
+# ---------------------------------------------------------------------------
+
+def _dead_slot_loads(stats, topo2):
+    faults = topo2.meta["faults"]
+    dead_flat = faults["dead_links"].reshape(-1)
+    return np.asarray(stats.link_loads)[dead_flat]
+
+
+@pytest.mark.parametrize("policy", ["minimal", "valiant", "adaptive"])
+def test_replay_never_crosses_dead_links_both_engines(policy):
+    """Acceptance: no delivered packet ever crosses a failed link, on
+    either cycle engine, for every policy."""
+    fab = make_fabric("xor", 16)
+    topo = fab.sim_topology()
+    spec = _connected_spec(topo, 0.08, 3)
+    topo2 = degrade(topo, spec)
+    wl = collective_workload(fab, "all_to_all")
+    for backend in ("numpy", "jax"):
+        stats = replay(topo2, policy, wl, backend=backend)
+        assert stats.packets_delivered == stats.packets_generated > 0
+        assert _dead_slot_loads(stats, topo2).sum() == 0, \
+            (policy, backend)
+
+
+def test_drained_replay_numpy_equals_xengine_link_for_link():
+    """Acceptance: numpy == xengine exactly (every directed link's
+    traversal count) on a drained deterministic workload with injected
+    failures, under deterministic minimal routing."""
+    fab = make_fabric("xor", 16)
+    topo2 = degrade(fab.sim_topology(), _connected_spec(
+        fab.sim_topology(), 0.08, 3))
+    wl = collective_workload(fab, "all_to_all")
+    np_stats = replay(topo2, "minimal", wl, backend="numpy")
+    jx_stats = replay(topo2, "minimal", wl, backend="jax")
+    assert np.array_equal(np.asarray(np_stats.link_loads),
+                          np.asarray(jx_stats.link_loads))
+    assert np_stats.completion_cycles == jx_stats.completion_cycles
+    # and the degradation was real: slower than the contention-free bound
+    assert np_stats.completion_cycles > np_stats.ideal_cycles
+
+
+def test_fabric_replay_failures_seam():
+    fab = make_fabric("xor", 16)
+    pristine = fab.replay("all_to_all")
+    spec = _connected_spec(fab.sim_topology(), 0.08, 3)
+    degraded = fab.replay("all_to_all", failures=spec)
+    assert pristine.completion_cycles == pristine.ideal_cycles
+    assert degraded.completion_cycles > pristine.completion_cycles
+    # dict form works at the seam too
+    again = fab.replay("all_to_all", failures=json.loads(spec.to_json()))
+    assert again.completion_cycles == degraded.completion_cycles
+
+
+def test_simulate_failures_kwarg_masks_dead_endpoints():
+    from repro.sim import uniform
+    from repro.sim.engine import simulate
+    from repro.sim.policies import make_policy
+    topo = make_fabric("xor", 16).sim_topology()
+    traffic = uniform(16, offered=0.2, cycles=120, terminals=2, seed=5)
+    stats = simulate(topo, make_policy("minimal"), traffic, cycles=120,
+                     warmup=0,
+                     failures=FailureSpec(dead_switches=(3,),
+                                          policy="drop"))
+    assert stats.packets_delivered > 0
+    # nothing was generated to or from the dead switch (the open-loop
+    # window ends before the tail drains, so compare generation counts)
+    assert stats.packets_generated < traffic.src.size
+    assert stats.topology == "cin-xor-16+ds1-drop"
+
+
+# ---------------------------------------------------------------------------
+# Traffic / workload masking.
+# ---------------------------------------------------------------------------
+
+def test_mask_workload_filters_dead_pairs_and_preserves_pristine():
+    fab = make_fabric("xor", 16)
+    wl = collective_workload(fab, "all_to_all")
+    topo2 = degrade(fab.sim_topology(),
+                    FailureSpec(dead_switches=(5,), policy="drop"))
+    masked = mask_workload(wl, topo2)
+    assert masked is not wl
+    for phase in masked.phases:
+        assert 5 not in phase.src and 5 not in phase.dst
+    # pristine topology: masking is the identity
+    assert mask_workload(wl, fab.sim_topology()) is wl
+    # the masked workload still drains on both engines
+    stats = replay(topo2, "minimal", masked, backend="numpy")
+    assert stats.packets_delivered == stats.packets_generated > 0
+
+
+def test_filter_pairs_drops_unreachable_demands():
+    topo = make_fabric("xor", 16).sim_topology()
+    topo2 = degrade(topo, FailureSpec(dead_switches=(2,), policy="drop"))
+    src = np.array([0, 2, 4, 1])
+    dst = np.array([1, 3, 2, 0])
+    rate = np.ones(4)
+    s, d, r = filter_pairs(topo2, src, dst, rate)
+    assert s.tolist() == [0, 1] and d.tolist() == [1, 0]
+    assert r.tolist() == [1.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# Studies integration: spec field, digest, backend guard, end to end.
+# ---------------------------------------------------------------------------
+
+def _study_spec(policy="minimal", *, failures=None, loads=(0.3,),
+                name=""):
+    return ExperimentSpec(
+        fabric=FabricSpec("cin", {"instance": "xor", "n": 16}),
+        traffic=TrafficSpec("uniform", {"seed": 21}),
+        routing=RoutingSpec(policy),
+        sweep=SweepSpec(loads=loads, seeds=(23,), cycles=160, warmup=40),
+        terminals=2, name=name, failures=failures)
+
+
+def test_experiment_spec_failures_field_round_trip_and_digest():
+    base = _study_spec()
+    assert base.failures is None
+    assert "failures" not in base.to_dict()
+    rt = ExperimentSpec.from_json(base.to_json())
+    assert rt == base and rt.digest() == base.digest()
+
+    spec = FailureSpec(link_fraction=0.05, seed=3)
+    deg = _study_spec(failures={"link_fraction": 0.05, "seed": 3})
+    assert deg.failures == spec
+    assert deg.digest() != base.digest()
+    rt2 = ExperimentSpec.from_json(deg.to_json())
+    assert rt2 == deg and rt2.failures == spec
+    # a null FailureSpec normalizes to None: identical digest/behaviour
+    assert _study_spec(failures={"link_fraction": 0.0}).digest() == \
+        base.digest()
+    assert "failures" in deg.describe() or "L0.05" in deg.describe()
+
+
+def test_failure_grid_expands_with_single_f0():
+    grid = failure_grid(_study_spec(name="base"), [0.0, 0.05], seeds=(0, 1))
+    names = [g.name for g in grid]
+    assert names == ["base/f0", "base/L0.05-s0", "base/L0.05-s1"]
+    assert grid[0].failures is None
+    assert all(g.failures is not None for g in grid[1:])
+
+
+def test_select_backend_flow_replay_strict_disconnected_raises():
+    """Satellite: the backend guard names the experiment and the fix."""
+    iso = tuple((0, j) for j in range(1, 16))
+    rep = ExperimentSpec(
+        fabric=FabricSpec("cin", {"instance": "xor", "n": 16}),
+        traffic=TrafficSpec("workload", {"collective": "all_to_all"}),
+        routing=RoutingSpec("minimal"),
+        name="replay-strict", failures=FailureSpec(dead_links=iso))
+    with pytest.raises(ValueError, match="replay-strict.*drop"):
+        _select_backend("flow", experiment=rep)
+    # drop policy sails through; so does a cycle backend (whose own
+    # degrade() raises later, naming the experiment)
+    assert _select_backend(
+        "flow", experiment=dataclasses.replace(
+            rep, failures=FailureSpec(dead_links=iso, policy="drop"))
+    ) == "flow"
+    assert _select_backend("numpy", experiment=rep) == "numpy"
+    with pytest.raises(FabricDisconnectedError, match="replay-strict"):
+        Study([rep], backend="numpy").run()
+
+
+def test_study_with_failures_end_to_end_and_resume(tmp_path):
+    store = str(tmp_path / "f.jsonl")
+    spec = _study_spec(failures={"link_fraction": 0.05, "seed": 3},
+                       loads=(0.2, 0.4), name="deg")
+    first = Study([spec], store=store, backend="numpy").run()
+    assert first.executed == 2
+    again = Study([spec], store=store, backend="numpy").run()
+    assert again.executed == 0 and again.restored == 2
+    # numpy resume is bit-identical
+    assert {r.key: r.accepted for r in first.results} == \
+        {r.key: r.accepted for r in again.results}
+    # editing the FailureSpec changes the digest -> stale store refused
+    edited = _study_spec(failures={"link_fraction": 0.05, "seed": 4},
+                         loads=(0.2, 0.4), name="deg")
+    with pytest.raises(ValueError, match="different version"):
+        Study([edited], store=store, backend="numpy").run()
+
+
+def test_study_zero_failure_bit_identical_to_pristine():
+    """Acceptance: failures=None and a null FailureSpec produce results
+    bit-identical to the pre-faults path (same keys, same stats)."""
+    pristine = Study([_study_spec(name="p")], backend="numpy").run()
+    null = Study([_study_spec(name="p",
+                              failures={"link_fraction": 0.0})],
+                 backend="numpy").run()
+    for a, b in zip(pristine.results, null.results):
+        assert a.accepted == b.accepted
+        assert a.packets_delivered == b.packets_delivered
+        assert a.latency_mean == b.latency_mean
+
+
+def test_flow_knee_matches_cycle_knee_on_degraded_grid():
+    """Acceptance: flow-backend saturation knees on a degraded fabric
+    within the flow-smoke lane's tolerance of the cycle engine's."""
+    spec = ExperimentSpec(
+        fabric=FabricSpec("cin", {"instance": "xor", "n": 16}),
+        traffic=TrafficSpec("uniform", {"seed": 21}),
+        routing=RoutingSpec("minimal"),
+        sweep=SweepSpec(loads=(0.3, 0.5, 0.7, 0.9), seeds=(23,),
+                        cycles=1200, warmup=300),
+        terminals=12, name="deg",
+        failures={"link_fraction": 0.05, "seed": 3})
+    cycle = Study([spec], backend="numpy").run().saturation_points()["deg"]
+    flow = Study([spec], backend="flow").run() \
+        .saturation_points(fidelity="flow")["deg"]
+    assert cycle is not None and flow is not None
+    assert abs(flow - cycle) <= 0.1 * cycle, (flow, cycle)
+
+
+def test_flow_trace_routes_raises_clearly_on_unreachable_pair():
+    from repro.flow.model import trace_routes
+    topo = make_fabric("xor", 16).sim_topology()
+    iso = tuple((0, j) for j in range(1, 16))
+    topo2 = degrade(topo, FailureSpec(dead_links=iso, policy="drop"))
+    with pytest.raises(RuntimeError, match="unwired port"):
+        trace_routes(topo2, np.array([0]), np.array([5]))
+
+
+# ---------------------------------------------------------------------------
+# Observability: the rerouted link class.
+# ---------------------------------------------------------------------------
+
+def test_link_classes_rerouted_disjoint_and_only_when_degraded():
+    from repro.obs.export import link_classes
+    topo = make_fabric("xor", 16).sim_topology()
+    assert "rerouted" not in link_classes(topo)
+    topo2 = degrade(topo, _connected_spec(topo, 0.08, 3))
+    classes = link_classes(topo2)
+    assert classes["rerouted"].any()
+    # classes partition the wired slots: pairwise disjoint, union = wired
+    masks = list(classes.values())
+    union = np.zeros_like(masks[0])
+    for i, a in enumerate(masks):
+        for b in masks[i + 1:]:
+            assert not (a & b).any()
+        union |= a
+    from repro.sim.link import LinkTable
+    wired = np.asarray(
+        LinkTable.for_topology(topo2, 1).neighbor_flat) >= 0
+    assert np.array_equal(union, wired)
+    # no rerouted slot is dead
+    assert not (classes["rerouted"]
+                & topo2.meta["faults"]["dead_links"].reshape(-1)).any()
