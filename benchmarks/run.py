@@ -35,6 +35,7 @@ MODULES = [
     "bench_flow",            # flow-model scale tiers (after _simulation: appends to its artifact)
     "bench_faults",          # degraded-fabric survivability (after _simulation: appends to its artifact)
     "bench_collective_replay",  # schedule -> simulator replay (after _simulation: appends to its artifact)
+    "bench_workload",        # extracted-step replay + serving SLOs (after _simulation: appends to its artifact)
     "bench_collectives",     # §2 refs [8,9]: LACIN collectives vs XLA
     "roofline",              # §Roofline (from dry-run JSONs)
 ]

@@ -15,7 +15,7 @@ Cross-validated against the numpy oracle's knees on every bundled spec
 --backend flow``.
 """
 from .adapters import (FlowSolution, ROUTINGS, pattern_demands,
-                       replay_estimate, replay_stats, saturation_load,
+                       replay_estimate, replay_stats, saturation_load, serving_stats,
                        simulate_flow, solve_flows, study_point_stats)
 from .model import (ETA_INJECTION, FlowParams, FlowProblem,
                     adversarial_demands, demands_from_traffic,
@@ -32,5 +32,6 @@ __all__ = [
     "maxmin_rates", "maxmin_rates_numpy", "maxmin_rates_jax",
     "solve_flows", "pattern_demands", "simulate_flow",
     "study_point_stats", "replay_estimate", "replay_stats",
+    "serving_stats",
     "saturation_load",
 ]

@@ -55,6 +55,8 @@ _CALLED_RE = re.compile(r"(?:to_apply|body|condition|branch_computations)="
 _TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)\\?"\}')
 _GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
 
 
 def _shape_bytes(text: str) -> int:
@@ -103,8 +105,12 @@ def parse_module(hlo: str) -> tuple[dict[str, _Comp], str]:
     for raw in hlo.splitlines():
         line = raw.rstrip()
         s = line.strip()
-        head = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{$",
-                        s)
+        # Computation headers are `[ENTRY] %name (params) -> shape {`.
+        # The params list nests parentheses for tuple-typed args (while
+        # bodies take one tuple arg), so the name is matched from the
+        # line start and the params are not regex-consumed at all.
+        head = (re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", s)
+                if s.endswith("{") and "->" in s else None)
         if head and not s.startswith(("ROOT", "//")) and "= " not in s:
             cur = _Comp(head.group(2))
             comps[cur.name] = cur
@@ -193,6 +199,71 @@ def collective_stats(hlo_text: str, default_group: int) -> CollectiveStats:
                 wire = raw
             stats.add(op, raw * m, wire * m, count=m)
     return stats
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    """One collective in program order (see :func:`collective_sequence`).
+
+    ``raw_bytes`` is the per-device result-shape size; ``count`` is the
+    loop-trip multiplier (an op inside a ``known_trip_count=k`` while
+    body appears once with ``count=k``); ``pairs`` holds a
+    collective-permute's ``source_target_pairs`` (empty otherwise).
+    """
+    kind: str
+    raw_bytes: int
+    group_size: int
+    count: int = 1
+    pairs: tuple = ()
+
+
+def collective_sequence(hlo_text: str, default_group: int
+                        ) -> list[CollectiveOp]:
+    """The module's collectives in program order, loop bodies expanded
+    by multiplier rather than unrolled.
+
+    Where :func:`collective_stats` aggregates per-op totals, this keeps
+    the *sequence* — the input :mod:`repro.workload` lowers into phased
+    :class:`~repro.sim.workloads.Workload`\\ s.  Each emitted op carries
+    its trip-count multiplier; consecutive execution order within a
+    computation follows line order, and calls (``while`` bodies,
+    ``to_apply`` targets that are not the collective's own reducer)
+    expand in place.
+    """
+    comps, entry = parse_module(hlo_text)
+    out: list[CollectiveOp] = []
+
+    def walk(name: str, m: int, stack: frozenset):
+        if name not in comps or name in stack:
+            return
+        inner = stack | {name}
+        for line in comps[name].lines:
+            cm = _COLL_RE.search(line)
+            if cm and f"{cm.group(1)}-done(" not in line:
+                pm = _PAIRS_RE.search(line)
+                pairs = (tuple((int(a), int(b))
+                               for a, b in _PAIR_RE.findall(pm.group(1)))
+                         if pm else ())
+                out.append(CollectiveOp(
+                    kind=cm.group(1), raw_bytes=_result_shape_bytes(line),
+                    group_size=_group_size(line, default_group),
+                    count=int(m), pairs=pairs))
+                continue                # don't descend into the reducer
+            if "while(" in line:
+                trip = _TRIP_RE.search(line)
+                mult = int(trip.group(1)) if trip else 1
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if bm:
+                    walk(bm.group(1), m * mult, inner)
+            else:
+                for mm in re.finditer(
+                        r"(?:to_apply|called_computations=\{)%?([\w.\-]+)",
+                        line):
+                    walk(mm.group(1), m, inner)
+
+    if entry:
+        walk(entry, 1, frozenset())
+    return out
 
 
 # ---------------------------------------------------------------------------

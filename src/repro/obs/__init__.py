@@ -42,14 +42,14 @@ Quickstart::
 """
 from .trace import Trace, TraceConfig, derive_backlog
 from .spans import (counter_events, export_perfetto, packet_events,
-                    phase_events, validate_trace_events)
+                    phase_events, request_events, validate_trace_events)
 from .telemetry import provenance, timed_compiled
 from .export import link_classes, replay_trace_events
 
 __all__ = [
     "Trace", "TraceConfig", "derive_backlog",
     "counter_events", "export_perfetto", "packet_events", "phase_events",
-    "validate_trace_events",
+    "request_events", "validate_trace_events",
     "provenance", "timed_compiled",
     "link_classes", "replay_trace_events",
 ]

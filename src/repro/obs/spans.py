@@ -27,11 +27,11 @@ import json
 import numpy as np
 
 __all__ = ["phase_events", "packet_events", "counter_events",
-           "export_perfetto", "validate_trace_events",
-           "PID_REPLAY", "PID_SWITCHES", "PID_COUNTERS"]
+           "request_events", "export_perfetto", "validate_trace_events",
+           "PID_REPLAY", "PID_SWITCHES", "PID_COUNTERS", "PID_REQUESTS"]
 
-#: Process ids of the three lanes an exported replay shows.
-PID_REPLAY, PID_SWITCHES, PID_COUNTERS = 1, 2, 3
+#: Process ids of the lanes an exported replay / serving run shows.
+PID_REPLAY, PID_SWITCHES, PID_COUNTERS, PID_REQUESTS = 1, 2, 3, 4
 
 _VALID_PH = {"X", "C", "M", "B", "E", "I", "i"}
 
@@ -100,6 +100,44 @@ def packet_events(trace, *, pid: int = PID_SWITCHES,
     for sw in sorted(lanes_used):
         label = f"switch {sw}" if not n else f"switch {sw}/{n}"
         events.append(_meta(pid, label, tid=sw))
+    return events
+
+
+def request_events(request, gen, deliver, *, slo: float | None = None,
+                   pid: int = PID_REQUESTS) -> list[dict]:
+    """One ``"X"`` span per *completed* serving request — arrival cycle
+    to last-packet delivery — and an ``"I"`` instant for each request
+    still open when the run stopped.
+
+    Inputs are the per-packet arrays a serving
+    :class:`~repro.sim.traffic.Traffic` run produces (``request`` ids,
+    ``gen`` cycles, ``deliver`` cycles, −1 = undelivered), the same
+    triple :func:`repro.sim.metrics.attach_serving` summarizes.  When
+    ``slo`` is given each span's args carry ``slo_met`` so Perfetto
+    queries can split the lane by attainment.
+    """
+    from repro.sim.metrics import request_latency_summary
+    rs = request_latency_summary(request, gen, deliver)
+    if not rs["count"]:
+        return []
+    events = [_meta(pid, "requests"), _meta(pid, "serving", tid=0)]
+    for k, (arr, lat) in enumerate(zip(rs["arrival"].tolist(),
+                                       rs["latency"].tolist())):
+        if lat < 0:
+            events.append({
+                "name": f"req {k} (open)", "cat": "request", "ph": "I",
+                "ts": int(arr), "pid": pid, "tid": 0, "s": "t",
+                "args": {"request": k},
+            })
+            continue
+        args = {"request": k, "latency": int(lat)}
+        if slo is not None:
+            args["slo_met"] = bool(lat <= float(slo))
+        events.append({
+            "name": f"req {k}", "cat": "request", "ph": "X",
+            "ts": int(arr), "dur": int(lat), "pid": pid, "tid": 0,
+            "args": args,
+        })
     return events
 
 

@@ -27,6 +27,7 @@ class Request:
     temperature: float = 0.0
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    arrived: int | None = None         # decode step at submit time
 
 
 class ServingEngine:
@@ -45,13 +46,39 @@ class ServingEngine:
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
         self.rng = np.random.default_rng(seed)
+        self.steps_total = 0              # decode steps across all runs
         self._decode = jax.jit(
             lambda p, t, c, q: decode_step(p, t, c, q, cfg, rules, max_seq))
         self._last_tok = jnp.zeros((slots, 1), jnp.int32)
 
     # -- request management ---------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request, *, at: int | None = None):
+        """Queue a request.  ``at`` overrides the recorded arrival step
+        (defaults to the engine's decode-step clock) so replayed logs
+        keep their original timestamps."""
+        req.arrived = self.steps_total if at is None else int(at)
         self.queue.append(req)
+
+    def arrival_trace(self, requests=None):
+        """The submitted requests' arrival times as a replayable
+        ``kind="trace"`` :class:`repro.workload.ArrivalSpec` — feed it to
+        :func:`repro.workload.serving_traffic` (or a ``"serving"``
+        study spec) to drive a fabric simulation with this engine's real
+        admission timing.  Sources are left empty: the fabric draws them
+        uniformly at replay, since engine slots are not switch ids.
+
+        ``requests`` defaults to everything queued or active now; pass
+        the list :meth:`run` returned to trace a completed batch.
+        """
+        from repro.workload import ArrivalSpec
+        if requests is None:
+            requests = [r for r in self.active if r is not None] + self.queue
+        times = tuple(int(r.arrived) for r in requests
+                      if r.arrived is not None)
+        if not times:
+            raise ValueError("no requests with recorded arrival steps; "
+                             "submit() some first")
+        return ArrivalSpec(kind="trace", times=times)
 
     def _admit(self):
         """Lockstep admission: fill empty slots at a batch boundary by
@@ -104,6 +131,7 @@ class ServingEngine:
             self.params, self._last_tok, self.caches,
             jnp.asarray(self.pos, jnp.int32))
         self.pos += 1
+        self.steps_total += 1
         tok = self._sample(logits[:, 0])
         self._last_tok = tok
         for i, r in enumerate(self.active):

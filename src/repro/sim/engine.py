@@ -31,7 +31,7 @@ import numpy as np
 from ..obs.telemetry import timing_dict
 from ..obs.trace import Trace, TraceConfig, derive_backlog
 from .link import LinkLoadCounter, LinkTable
-from .metrics import (RunStats, attach_replay, build_stats,
+from .metrics import (RunStats, attach_replay, attach_serving, build_stats,
                       replay_timeline)
 from .policies import RoutingPolicy
 from .switch import QueueFabric, arbitrate
@@ -80,6 +80,8 @@ class Engine:
         self.src = traffic.src[order].astype(np.int64)
         self.dst = traffic.dst[order].astype(np.int64)
         self.gen = traffic.gen[order].astype(np.int64)
+        self.request = (traffic.request[order].astype(np.int64)
+                        if traffic.request is not None else None)
         m = self.src.size
         self.mid = self.dst.copy()
         self.phase = np.ones(m, dtype=np.int64)
@@ -376,6 +378,9 @@ class Engine:
             gen=self.gen, deliver=self.deliver, link_counter=self.load,
             delivered_in_window=self.delivered_in_window,
             in_flight=self.fabric.total_occupancy)
+        if self.request is not None:
+            stats = attach_serving(stats, self.request, self.gen,
+                                   self.deliver, slo=self.traffic.slo)
         return self._attach_obs(stats, wall_s)
 
     def _attach_obs(self, stats: RunStats, wall_s: float) -> RunStats:

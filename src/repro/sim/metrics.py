@@ -47,6 +47,20 @@ class RunStats:
     #: The schedule algebra's contention-free lower bound
     #: (:attr:`repro.sim.workloads.Workload.ideal_cycles`).
     ideal_cycles: int | None = None
+    # -- serving fields (repro.workload); None for non-serving traffic ------
+    #: Requests whose packets were all generated inside the run.
+    request_count: int | None = None
+    #: Per-request latency percentiles in cycles (a request's latency is
+    #: the delivery cycle of its *last* packet minus its arrival cycle,
+    #: +1), over completed requests.
+    request_latency_p50: float | None = None
+    request_latency_p95: float | None = None
+    request_latency_p99: float | None = None
+    #: The SLO target (cycles) the traffic carried, if any.
+    slo_target: float | None = None
+    #: Fraction of requests that completed within ``slo_target`` cycles;
+    #: a request that never completed counts as a miss.
+    slo_attainment: float | None = None
     # -- observability (repro.obs); excluded from equality: two runs with
     # identical dynamics are the same run regardless of wall clock -----------
     #: Wall-clock/compile-vs-execute record
@@ -109,6 +123,60 @@ def attach_replay(stats: RunStats, workload, phase_done) -> RunStats:
     stats.phase_cycles = tuple(int(d - s) for s, d in zip(starts, done))
     stats.completion_cycles = int(done[-1]) if done.size else 0
     stats.ideal_cycles = int(workload.ideal_cycles)
+    return stats
+
+
+def request_latency_summary(request, gen, deliver) -> dict:
+    """Per-request latency facts for serving traffic.
+
+    ``request`` groups packets into requests; a request's arrival is the
+    min ``gen`` over its packets and it completes the cycle its *last*
+    packet delivers.  Returns request count, completed count, and the
+    (count,) arrays of per-request arrival cycles and latencies (−1 for
+    a request with an undelivered packet).
+    """
+    request = np.asarray(request, dtype=np.int64)
+    if request.size == 0:
+        return {"count": 0, "completed": 0,
+                "arrival": np.zeros(0, np.int64),
+                "latency": np.zeros(0, np.int64)}
+    # Compact ids so min/max reductions index densely.
+    uniq, dense = np.unique(request, return_inverse=True)
+    count = uniq.size
+    arrival = np.full(count, np.iinfo(np.int64).max, dtype=np.int64)
+    np.minimum.at(arrival, dense, np.asarray(gen, dtype=np.int64))
+    deliver = np.asarray(deliver, dtype=np.int64)
+    last = np.full(count, -1, dtype=np.int64)
+    np.maximum.at(last, dense, deliver)
+    complete = np.ones(count, dtype=bool)
+    # Any undelivered packet (deliver == -1) leaves its request open.
+    np.logical_and.at(complete, dense, deliver >= 0)
+    latency = np.where(complete, last - arrival + 1, -1)
+    return {"count": count, "completed": int(complete.sum()),
+            "arrival": arrival, "latency": latency}
+
+
+def attach_serving(stats: RunStats, request, gen, deliver, *,
+                   slo: float | None = None) -> RunStats:
+    """Fill the serving fields from per-packet request ids + deliveries.
+
+    Percentiles are over *completed* requests; SLO attainment counts an
+    incomplete request (a packet still queued when the run stopped) as a
+    miss, so a non-drained saturated run reports honestly low
+    attainment rather than a survivor-biased tail.
+    """
+    rs = request_latency_summary(request, gen, deliver)
+    stats.request_count = rs["count"]
+    lat = rs["latency"][rs["latency"] >= 0]
+    if lat.size:
+        p50, p95, p99 = np.percentile(lat, [50, 95, 99])
+        stats.request_latency_p50 = round(float(p50), 3)
+        stats.request_latency_p95 = round(float(p95), 3)
+        stats.request_latency_p99 = round(float(p99), 3)
+    stats.slo_target = float(slo) if slo is not None else None
+    if slo is not None and rs["count"]:
+        met = int((lat <= float(slo)).sum())
+        stats.slo_attainment = round(met / rs["count"], 4)
     return stats
 
 

@@ -125,6 +125,13 @@ def to_record(stats: RunStats) -> dict:
         rec["ideal_cycles"] = stats.ideal_cycles
     if stats.phase_cycles is not None:
         rec["phase_cycles"] = [int(x) for x in stats.phase_cycles]
+    if stats.request_count is not None:
+        rec["request_count"] = stats.request_count
+        for f in ("request_latency_p50", "request_latency_p95",
+                  "request_latency_p99", "slo_target", "slo_attainment"):
+            v = getattr(stats, f)
+            if v is not None:
+                rec[f] = v
     if stats.timing is not None:
         rec["timing"] = dict(stats.timing)
     return rec

@@ -46,6 +46,13 @@ class Traffic:
     packet's *phase ordinal* — the barrier it waits behind — rather
     than a generation cycle, and the engines gate injection on phase
     completion instead of simulated time.
+
+    ``request`` marks *serving* traffic (:mod:`repro.workload`): a
+    per-packet request id grouping the packets of one inference request.
+    The engines then report per-request latency percentiles and — when
+    ``slo`` names a target in cycles — SLO attainment, on top of the
+    usual per-packet statistics.  A request completes when its last
+    packet delivers; its latency is measured from its arrival cycle.
     """
     name: str
     src: np.ndarray
@@ -55,6 +62,8 @@ class Traffic:
     horizon: int = 0            # generation window in cycles
     terminals: int | None = None  # injectors/switch the rate was scaled by
     workload: object | None = None  # repro.sim.workloads.Workload for replays
+    request: np.ndarray | None = None  # per-packet request id (serving)
+    slo: float | None = None    # request-latency SLO target in cycles
 
     @property
     def num_packets(self) -> int:

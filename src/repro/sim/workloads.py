@@ -353,6 +353,68 @@ def _dragonfly_all_reduce(fab, message_size: int) -> Workload:
                     _chain(local_rs, global_ar, local_ag))
 
 
+def _cin_half_reduce(fab, message_size: int, tag: str) -> Workload:
+    """One pass over the 1-factor schedule — the reduce-scatter (or,
+    identically as a step sequence, the all-gather) half of the flat
+    all-reduce."""
+    phases = _schedule_phases(fab.schedule(), message_size)
+    return Workload(f"{fab.name}-{tag}", fab.num_switches, tuple(phases))
+
+
+def _hyperx_half_reduce(fab, message_size: int, tag: str,
+                        gather: bool) -> Workload:
+    """One dimension-order sweep: innermost-first for the reduce-scatter
+    half, reversed (outermost-first) for the all-gather half — exactly
+    the two halves :func:`_hyperx_all_reduce` chains."""
+    cfg = fab.config
+    index_of = {tuple(cfg.switch_coord(s)): s
+                for s in range(cfg.num_switches)}
+    per_dim = _grid_phase_lists(cfg.dims, fab.schedule(), cfg.switch_coord,
+                                lambda c: index_of[c], message_size)
+    phases = _chain(*(reversed(per_dim) if gather else per_dim))
+    return Workload(f"{fab.name}-{tag}", cfg.num_switches, phases)
+
+
+def _dragonfly_half_reduce(fab, message_size: int, tag: str,
+                           gather: bool) -> Workload:
+    """Half of the two-level sequence: local RS then one global pass
+    (scatter), or one global pass then local AG (gather).  Global phases
+    carry the 1/a-shrunk payload, as in :func:`_dragonfly_all_reduce`."""
+    c = fab.config
+    a, g = c.group_size, c.num_groups
+    sched = fab.schedule()
+    g_msg = max(1, -(-message_size // a))
+
+    def local_pairs(row):
+        src, dst = [], []
+        for grp in range(g):
+            for s in range(a):
+                t = int(row[s])
+                if t != s:
+                    src.append(grp * a + s)
+                    dst.append(grp * a + t)
+        return tuple(src), tuple(dst)
+
+    def global_pairs(row):
+        src, dst = [], []
+        for grp in range(g):
+            peer = int(row[grp])
+            if peer == grp:
+                continue
+            for s in range(a):
+                src.append(grp * a + s)
+                dst.append(peer * a + s)
+        return tuple(src), tuple(dst)
+
+    local = _schedule_phases(sched["local"], message_size,
+                             to_pairs=local_pairs)
+    global_half = _schedule_phases(sched["global"], g_msg,
+                                   to_pairs=global_pairs)
+    phases = (_chain(global_half, local) if gather
+              else _chain(local, global_half))
+    return Workload(f"{fab.name}-{tag}", c.switches, phases)
+
+
 def collective_workload(fabric, collective: str = "all_to_all", *,
                         message_size: int = 1) -> Workload:
     """The replayable step sequence of ``collective`` on ``fabric``.
@@ -360,11 +422,16 @@ def collective_workload(fabric, collective: str = "all_to_all", *,
     * ``"all_to_all"`` — flat 1-factor schedule (CIN), dimension-order
       grid schedule (HyperX), or (local x global) grid (Dragonfly);
     * ``"all_reduce"`` — reduce-scatter + all-gather chains (CIN /
-      HyperX per dimension), or the two-level Dragonfly sequence.
+      HyperX per dimension), or the two-level Dragonfly sequence;
+    * ``"reduce_scatter"`` / ``"all_gather"`` — the corresponding half
+      of the all-reduce sequence (what GSPMD's ZeRO-style sharded DP
+      and :func:`repro.runtime.manual_dp.lacin_grad_allreduce` emit as
+      separate HLO ops — see :mod:`repro.workload`).
 
     ``message_size`` is the packets per (src, dst) pair per phase; the
-    Dragonfly ``all_reduce`` global phases carry ``ceil(message_size /
-    group_size)`` (the hierarchical payload shrink).
+    Dragonfly ``all_reduce``/half-sequence global phases carry
+    ``ceil(message_size / group_size)`` (the hierarchical payload
+    shrink).
     """
     from repro.fabric import (CINFabric, DragonflyFabric, HyperXFabric,
                               make_fabric)
@@ -376,6 +443,18 @@ def collective_workload(fabric, collective: str = "all_to_all", *,
         ("all_reduce", CINFabric): _cin_all_reduce,
         ("all_reduce", HyperXFabric): _hyperx_all_reduce,
         ("all_reduce", DragonflyFabric): _dragonfly_all_reduce,
+        ("reduce_scatter", CINFabric):
+            lambda f, m: _cin_half_reduce(f, m, "rs"),
+        ("reduce_scatter", HyperXFabric):
+            lambda f, m: _hyperx_half_reduce(f, m, "rs", gather=False),
+        ("reduce_scatter", DragonflyFabric):
+            lambda f, m: _dragonfly_half_reduce(f, m, "rs", gather=False),
+        ("all_gather", CINFabric):
+            lambda f, m: _cin_half_reduce(f, m, "ag"),
+        ("all_gather", HyperXFabric):
+            lambda f, m: _hyperx_half_reduce(f, m, "ag", gather=True),
+        ("all_gather", DragonflyFabric):
+            lambda f, m: _dragonfly_half_reduce(f, m, "ag", gather=True),
     }
     builder = builders.get((collective, type(fabric)))
     if builder is None:

@@ -72,7 +72,7 @@ from ..obs.telemetry import timed_compiled
 from ..obs.trace import Trace, TraceConfig, derive_backlog
 from .engine import _DRAIN_SLACK
 from .link import LinkLoadCounter, LinkTable
-from .metrics import (RunStats, attach_replay, build_stats,
+from .metrics import (RunStats, attach_replay, attach_serving, build_stats,
                       replay_timeline)
 from .policies import RoutingPolicy, make_policy
 from .topology import SimTopology
@@ -896,6 +896,20 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         if replaying:
             attach_replay(stats, wls[i],
                           out["phase_done"][i, :wls[i].num_phases])
+        if tr.request is not None:
+            # Serving metrics need request ids in the engine's packet
+            # order.  Recompute _pack_traffic's permutation (a stable
+            # lexsort over identical inputs — bit-identical to the one
+            # the packing used) host-side; the compiled program never
+            # sees the request array.
+            req = np.asarray(tr.request, dtype=np.int64)
+            src64 = tr.src.astype(np.int64)
+            gen64 = tr.gen.astype(np.int64)
+            sort_key = src64 * (gen64.max(initial=0) + 1) + gen64
+            if not np.all(sort_key[1:] >= sort_key[:-1]):
+                req = req[np.lexsort((tr.gen, tr.src))]
+            attach_serving(stats, req, packed[i]["gen"][:m].astype(np.int64),
+                           deliver, slo=tr.slo)
         stats.timing = timing
         if trace_cfg is not None:
             # Slice copy i's columns out of the flat ring buffers; block

@@ -7,7 +7,10 @@ Commands:
   next to the current directory).  Re-running resumes: grid points whose
   keys are already in the store are skipped.
 * ``show SPEC``  — print the experiments, grid sizes, and store keys a
-  spec expands to, without running anything.  ``--trace`` additionally
+  spec expands to, without running anything.  ``--results`` additionally
+  prints each stored record's fidelity tier, latency percentiles, and
+  serving SLO fields (including fields written by a newer version —
+  nothing is silently dropped).  ``--trace`` additionally
   reads the spec's result store and prints each record's provenance
   (host, backend, compile-vs-execute timings) plus the per-experiment
   compile-tax summary.
@@ -75,7 +78,16 @@ def cmd_run(args) -> int:
         for name, rp in replays.items():
             print(f"  {name}: measured={rp['measured']} "
                   f"ideal={rp['ideal']} ratio={rp['ratio']}")
-    if len(replays) < len(out.experiments):
+    serving = out.serving_points()
+    if serving:
+        print("serving SLO (worst grid point):")
+        for name, sp in serving.items():
+            att = (f"{sp['attainment']:.4f}"
+                   if sp['attainment'] is not None else "n/a")
+            print(f"  {name}: requests={sp['requests']} p50={sp['p50']} "
+                  f"p95={sp['p95']} p99={sp['p99']} "
+                  f"slo={sp['slo']} attainment={att}")
+    if len(replays) + len(serving) < len(out.experiments):
         print("saturation points:")
         try:
             knees = [("", out.saturation_points())]
@@ -85,7 +97,7 @@ def cmd_run(args) -> int:
                      for tier in ("cycle", "flow")]
         for suffix, tier_knees in knees:
             for name, knee in tier_knees.items():
-                if name in replays:
+                if name in replays or name in serving:
                     continue
                 print(f"  {name}{suffix}: "
                       f"{knee if knee is not None else '> max load'}")
@@ -107,9 +119,45 @@ def cmd_show(args) -> int:
                   f"(policy={exp.failures.policy})")
         print(f"    first key: {exp.key(*pts[0])}")
     print(f"{len(specs)} experiments, {total} grid points")
+    if getattr(args, "results", False):
+        _show_results(spec_path, args.store)
     if getattr(args, "trace", False):
         _show_trace(spec_path, specs, args.store)
     return 0
+
+
+def _show_results(spec_path: str, store_arg: str | None) -> None:
+    """The ``show --results`` tail: one line per stored record, with the
+    fidelity tier, serving latency percentiles, and any fields written
+    by a newer Result version (``extra``) — nothing silently dropped."""
+    store_path = store_arg if store_arg is not None \
+        else _default_store(spec_path)
+    store = JsonlStore(store_path)
+    if not store.exists():
+        print(f"no result store at {store_path} — run the study first "
+              f"(or pass --store)")
+        return
+    records = store.load()
+    print(f"\nstore: {store_path} ({len(records)} records)")
+    for key in sorted(records):
+        r = records[key]
+        line = (f"  {key}: fidelity={r.fidelity} "
+                f"accepted={r.accepted} lat_p99={r.latency_p99}")
+        if r.completion_cycles is not None:
+            line += (f" completion={r.completion_cycles}"
+                     f" ideal={r.ideal_cycles}")
+        if r.request_count is not None:
+            line += (f" requests={r.request_count}"
+                     f" req_p50={r.request_latency_p50}"
+                     f" req_p95={r.request_latency_p95}"
+                     f" req_p99={r.request_latency_p99}")
+            if r.slo_target is not None:
+                line += (f" slo={r.slo_target}"
+                         f" attainment={r.slo_attainment}")
+        if r.extra:
+            line += " " + " ".join(f"{k}={v}" for k, v in
+                                   sorted(r.extra.items()))
+        print(line)
 
 
 def _show_trace(spec_path: str, specs, store_arg: str | None) -> None:
@@ -256,6 +304,9 @@ def main(argv=None) -> int:
 
     show = sub.add_parser("show", help="expand a spec without running")
     show.add_argument("spec", help="spec file path or bundled spec name")
+    show.add_argument("--results", action="store_true",
+                      help="also print each stored record's fidelity, "
+                           "latency percentiles, and serving SLO fields")
     show.add_argument("--trace", action="store_true",
                       help="also print stored provenance/timing records "
                            "and the per-experiment compile tax")

@@ -219,6 +219,36 @@ class StudyResult:
             }
         return out
 
+    def serving_points(self) -> dict[str, dict]:
+        """Per serving experiment: the grid's worst request-latency
+        percentiles and lowest SLO attainment (the headline numbers a
+        serving study exists to measure).  Experiments without request
+        records are omitted."""
+        out: dict[str, dict] = {}
+        for exp in self.experiments:
+            rows = [r for r in self.results
+                    if r.experiment == exp.name
+                    and getattr(r, "request_count", None)]
+            if not rows:
+                continue
+
+            def worst(field_name, rows=rows):
+                vals = [getattr(r, field_name) for r in rows
+                        if getattr(r, field_name, None) is not None]
+                return max(vals) if vals else None
+
+            atts = [r.slo_attainment for r in rows
+                    if getattr(r, "slo_attainment", None) is not None]
+            out[exp.name] = {
+                "requests": sum(r.request_count for r in rows),
+                "p50": worst("request_latency_p50"),
+                "p95": worst("request_latency_p95"),
+                "p99": worst("request_latency_p99"),
+                "slo": rows[0].slo_target,
+                "attainment": min(atts) if atts else None,
+            }
+        return out
+
     def telemetry(self) -> dict[str, dict]:
         """Compile-vs-execute telemetry per experiment, deduplicated.
 
@@ -422,6 +452,87 @@ class Study:
             def tf(load, seed):
                 return _mask(inner(load, seed), masked_topo)
         return topo, tf
+
+    # -- serving capacity ----------------------------------------------------
+
+    def slo_capacity(self, experiment: str | None = None, *,
+                     percentile: float = 99.0, lo: float = 0.05,
+                     hi: float = 2.0, tol: float = 0.01,
+                     seed: int = 0) -> dict:
+        """Largest load scale at which a serving experiment still meets
+        its SLO, by bisection on the load axis.
+
+        A load is *feasible* when the probed point's SLO attainment is
+        at least ``percentile / 100`` — i.e. the latency ``percentile``
+        sits at or under the traffic's ``slo`` target, with requests
+        that never completed counting as misses.  Probes run outside
+        the study's store (warmup 0, the experiment's own seed policy)
+        on the numpy oracle, or on the flow model when the experiment
+        resolves to the flow tier.  Returns ``{"capacity", "percentile",
+        "slo", "probes": [(load, attainment), ...]}``; ``capacity`` is
+        0.0 when even ``lo`` misses and ``hi`` when the search never
+        found the knee (raise ``hi`` to chase it).
+        """
+        exps = {e.name: e for e in self.experiments}
+        if experiment is None:
+            if len(exps) != 1:
+                raise ValueError(
+                    f"study has {len(exps)} experiments; pass one of "
+                    f"{sorted(exps)}")
+            experiment = next(iter(exps))
+        exp = exps[experiment]
+        if exp.traffic.pattern != "serving":
+            raise ValueError(
+                f"slo_capacity needs a 'serving' traffic pattern; "
+                f"experiment {exp.name!r} uses {exp.traffic.pattern!r}")
+        slo = exp.traffic.params.get("slo")
+        if slo is None:
+            raise ValueError(
+                f"experiment {exp.name!r} sets no params['slo'] target to "
+                f"search against")
+        if not (0.0 < lo <= hi) or tol <= 0:
+            raise ValueError(f"need 0 < lo <= hi and tol > 0; "
+                             f"got lo={lo}, hi={hi}, tol={tol}")
+        backend = _select_backend(self.backend,
+                                  num_switches=exp.fabric.num_switches,
+                                  experiment=exp)
+        topo, tf = self._resolve(exp)
+        target = float(percentile) / 100.0
+        probes: list[tuple[float, float]] = []
+
+        def attainment(load: float) -> float:
+            if backend == "flow":
+                from repro.flow import study_point_stats
+                stats = study_point_stats(exp, topo, tf, load, seed)
+            else:
+                from repro.sim.engine import simulate
+                cycles = exp.sweep.cycles or 1
+                stats = simulate(topo, exp.routing.make(), tf(load, seed),
+                                 terminals=exp.terminals, cycles=cycles,
+                                 warmup=0, seed=seed, backend="numpy",
+                                 **dict(exp.engine))
+            att = stats.slo_attainment
+            att = 0.0 if att is None else float(att)
+            probes.append((round(float(load), 6), att))
+            return att
+
+        out = {"experiment": exp.name, "percentile": float(percentile),
+               "slo": float(slo), "probes": probes}
+        if attainment(lo) < target:
+            out["capacity"] = 0.0
+            return out
+        if attainment(hi) >= target:
+            out["capacity"] = float(hi)
+            return out
+        good, bad = float(lo), float(hi)
+        while bad - good > tol:
+            mid = (good + bad) / 2.0
+            if attainment(mid) >= target:
+                good = mid
+            else:
+                bad = mid
+        out["capacity"] = round(good, 6)
+        return out
 
     def _run_jax(self, exp: ExperimentSpec,
                  missing: Sequence[tuple[float, int]]) -> list[Result]:

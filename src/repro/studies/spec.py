@@ -251,8 +251,10 @@ class FabricSpec(_SpecBase):
 # ---------------------------------------------------------------------------
 
 #: Declarative pattern names: the open-loop generators of
-#: :mod:`repro.sim.traffic` plus the closed collective-replay kind.
-_PATTERNS = ("uniform", "permutation", "hotspot", "adversarial", "workload")
+#: :mod:`repro.sim.traffic`, the closed collective-replay kind, and the
+#: request-level serving kind (:mod:`repro.workload`).
+_PATTERNS = ("uniform", "permutation", "hotspot", "adversarial", "workload",
+             "serving")
 
 
 @dataclass(frozen=True, eq=True)
@@ -281,6 +283,13 @@ class TrafficSpec(_SpecBase):
     * ``{"workload": {...}}`` — an explicit
       :meth:`repro.sim.workloads.Workload.to_dict` payload, replayed
       verbatim (still serializable).
+
+    **Serving streams** (``serving``): open-loop *request* arrivals from
+    an :class:`repro.workload.ArrivalSpec` — ``params`` is
+    ``{"arrival": {...spec dict...}, "packets_per_request": p,
+    "slo": cycles}`` and the sweep's ``loads`` scale the arrival rate
+    (:func:`repro.workload.serving_traffic`), so the engines report
+    per-request latency percentiles and SLO attainment per grid point.
     """
     pattern: str
     params: dict = field(default_factory=dict)
@@ -310,6 +319,25 @@ class TrafficSpec(_SpecBase):
         if self.pattern == "workload":
             tr = self._resolve_workload(topo).traffic()
             return lambda load, seed: tr
+        if self.pattern == "serving":
+            from repro.workload import ArrivalSpec, serving_traffic
+            if cycles is None:
+                raise ValueError("serving traffic needs sweep.cycles to "
+                                 "size its arrival window")
+            kw = dict(self.params)
+            spec = ArrivalSpec.coerce(kw.pop("arrival", None))
+            if spec is None:
+                raise ValueError("serving traffic needs params['arrival'] "
+                                 "(an ArrivalSpec dict)")
+            ppr = int(kw.pop("packets_per_request", 4))
+            slo = kw.pop("slo", None)
+            if kw:
+                raise ValueError(f"unknown serving traffic params: "
+                                 f"{sorted(kw)}")
+            n = topo.num_switches
+            return lambda load, seed: serving_traffic(
+                spec, n, cycles=cycles, load=load, terminals=terminals,
+                packets_per_request=ppr, slo=slo, seed=seed)
         if self.pattern not in _PATTERNS:
             raise ValueError(
                 f"unknown traffic pattern {self.pattern!r}; expected one "
@@ -382,6 +410,15 @@ class TrafficSpec(_SpecBase):
             if isinstance(wl, Mapping):
                 return f"replay-{wl.get('name', 'workload')}"
             return f"replay-{self.params.get('collective', 'all_to_all')}"
+        if self.pattern == "serving":
+            arrival = self.params.get("arrival")
+            if isinstance(arrival, Mapping):
+                from repro.workload import ArrivalSpec
+                try:
+                    return f"serving-{ArrivalSpec.from_dict(arrival).label}"
+                except (TypeError, ValueError):
+                    pass
+            return "serving"
         return self.pattern
 
 

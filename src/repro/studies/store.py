@@ -70,10 +70,27 @@ class Result:
     ideal_cycles: int | None = None
     #: Per-phase durations in cycles.
     phase_cycles: list | None = None
+    # -- serving summary (None for non-serving experiments) ------------------
+    #: Distinct request ids in the serving stream.
+    request_count: int | None = None
+    #: Per-request latency percentiles, cycles (last packet delivered
+    #: minus arrival, +1); computed over completed requests.
+    request_latency_p50: float | None = None
+    request_latency_p95: float | None = None
+    request_latency_p99: float | None = None
+    #: The per-request latency SLO carried by the traffic, and the
+    #: fraction of requests that completed within it (requests that
+    #: never completed count as misses).
+    slo_target: float | None = None
+    slo_attainment: float | None = None
     #: Environment + timing block (:func:`repro.obs.telemetry.provenance`):
     #: host, library versions, and the point's compile-vs-execute split.
     #: ``None`` for records from older stores.
     provenance: dict | None = None
+    #: Fields a *newer* version of this class wrote that this one does
+    #: not know.  Carried verbatim so loading and re-appending a store
+    #: never silently drops data, and ``show`` can still print them.
+    extra: dict = field(default_factory=dict)
     #: The full in-memory stats of a freshly executed point (histograms,
     #: raw link loads).  ``None`` for points restored from a store.
     stats: RunStats | None = field(default=None, compare=False, repr=False)
@@ -108,22 +125,35 @@ class Result:
             ideal_cycles=stats.ideal_cycles,
             phase_cycles=(list(stats.phase_cycles)
                           if stats.phase_cycles is not None else None),
+            request_count=stats.request_count,
+            request_latency_p50=stats.request_latency_p50,
+            request_latency_p95=stats.request_latency_p95,
+            request_latency_p99=stats.request_latency_p99,
+            slo_target=stats.slo_target,
+            slo_attainment=stats.slo_attainment,
             provenance=provenance(stats.timing, backend=backend,
                                   spec_digest=spec_digest),
             stats=stats)
 
     def record(self) -> dict:
-        """The JSON-object form (everything except the in-memory stats)."""
-        return {f.name: getattr(self, f.name) for f in fields(self)
-                if f.name != "stats"}
+        """The JSON-object form (everything except the in-memory stats).
+
+        Unknown fields restored into ``extra`` are merged back at the
+        top level, so load -> append round-trips a newer store's records
+        byte-compatibly."""
+        out = {f.name: getattr(self, f.name) for f in fields(self)
+               if f.name not in ("stats", "extra")}
+        out.update(self.extra)
+        return out
 
     def to_line(self) -> str:
         return json.dumps(self.record(), sort_keys=True)
 
     @classmethod
     def from_record(cls, d: Mapping) -> "Result":
-        want = {f.name for f in fields(cls)} - {"stats"}
-        return cls(**{k: v for k, v in d.items() if k in want})
+        want = {f.name for f in fields(cls)} - {"stats", "extra"}
+        extra = {k: v for k, v in d.items() if k not in want}
+        return cls(**{k: v for k, v in d.items() if k in want}, extra=extra)
 
 
 class JsonlStore:

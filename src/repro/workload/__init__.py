@@ -1,0 +1,35 @@
+"""repro.workload — real workloads: extracted training steps + serving.
+
+Two halves bridging the runtime and simulator tiers:
+
+* **Extraction** (:mod:`~repro.workload.extract`): walk a compiled
+  training step's HLO and lower its collective sequence (MoE all-to-all
+  dispatch/combine, DP all-reduce, pipeline point-to-point) into
+  byte-accurate, phase-barriered :class:`~repro.sim.workloads.Workload`
+  objects replayable on all three backends.
+* **Serving** (:mod:`~repro.workload.arrivals` /
+  :mod:`~repro.workload.serving`): declarative open-loop arrival
+  processes (:class:`ArrivalSpec`: Poisson / bursty MMPP /
+  trace-driven) turned into timed injection schedules with per-request
+  latency percentiles and SLO-attainment reporting.
+
+``python -m repro.workload`` exposes both as a CLI (extract / replay /
+slo).
+"""
+from .arrivals import KINDS, ArrivalSpec
+from .extract import (COLLECTIVE_TO_SCHEDULE, compiled_hlo, dp_step_hlo,
+                      moe_step_hlo, pipeline_step_hlo, workload_from_hlo)
+from .serving import serving_demands, serving_traffic
+
+__all__ = [
+    "ArrivalSpec",
+    "KINDS",
+    "COLLECTIVE_TO_SCHEDULE",
+    "workload_from_hlo",
+    "compiled_hlo",
+    "moe_step_hlo",
+    "dp_step_hlo",
+    "pipeline_step_hlo",
+    "serving_traffic",
+    "serving_demands",
+]
