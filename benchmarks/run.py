@@ -36,6 +36,7 @@ MODULES = [
     "bench_faults",          # degraded-fabric survivability (after _simulation: appends to its artifact)
     "bench_collective_replay",  # schedule -> simulator replay (after _simulation: appends to its artifact)
     "bench_workload",        # extracted-step replay + serving SLOs (after _simulation: appends to its artifact)
+    "bench_compile",         # compile cache cold/warm/disk split + 1040-switch xl point (appends to the artifact)
     "bench_collectives",     # §2 refs [8,9]: LACIN collectives vs XLA
     "roofline",              # §Roofline (from dry-run JSONs)
 ]

@@ -43,7 +43,8 @@ Quickstart::
 from .trace import Trace, TraceConfig, derive_backlog
 from .spans import (counter_events, export_perfetto, packet_events,
                     phase_events, request_events, validate_trace_events)
-from .telemetry import provenance, timed_compiled
+from .telemetry import (cache_dir, cache_stats, clear_caches, provenance,
+                        reset_cache_stats, timed_compiled)
 from .export import link_classes, replay_trace_events
 
 __all__ = [
@@ -51,5 +52,6 @@ __all__ = [
     "counter_events", "export_perfetto", "packet_events", "phase_events",
     "request_events", "validate_trace_events",
     "provenance", "timed_compiled",
+    "cache_dir", "cache_stats", "clear_caches", "reset_cache_stats",
     "link_classes", "replay_trace_events",
 ]

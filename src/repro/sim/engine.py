@@ -396,7 +396,8 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
              cycles: int | None = None,
              warmup: int = 0, drain: bool | None = None,
              max_cycles: int | None = None, seed: int = 0,
-             backend: str = "numpy", trace=None, failures=None) -> RunStats:
+             backend: str = "numpy", trace=None, failures=None,
+             bucket: bool | None = None, devices=None) -> RunStats:
     """Run one simulation; ``backend`` picks the engine.
 
     ``terminals`` defaults to what the traffic object was generated with
@@ -429,6 +430,12 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
     a kwargs dict); the sampled :class:`~repro.obs.Trace` lands on
     ``stats.trace``.  Both backends also stamp ``stats.timing`` with the
     run's wall-clock (and, for ``"jax"``, compile-vs-execute) split.
+
+    ``bucket`` / ``devices`` are compiled-engine program knobs
+    (shape bucketing and ``shard_map`` device sharding — see
+    :func:`repro.sim.xengine.sweep`); both are bit-identity-preserving,
+    and both are accepted-but-ignored by the other backends, which have
+    no compiled program to shape.
     """
     if failures is not None:
         from repro.faults import degrade, mask_traffic
@@ -440,7 +447,7 @@ def simulate(topo: SimTopology, policy: RoutingPolicy, traffic: Traffic, *,
             topo, policy, traffic, terminals=terminals, eject_bw=eject_bw,
             num_vcs=num_vcs, queue_capacity=queue_capacity, cycles=cycles,
             warmup=warmup, drain=drain, max_cycles=max_cycles, seed=seed,
-            trace=trace)
+            trace=trace, bucket=bucket, devices=devices)
     if backend == "flow":
         from repro.flow import simulate_flow
         return simulate_flow(topo, policy, traffic, terminals=terminals,

@@ -473,7 +473,8 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
            terminals: int | None = None, eject_bw: int | None = None,
            num_vcs: int | None = None, queue_capacity: int = 4,
            max_cycles: int | None = None, seed: int = 0,
-           trace=None, failures=None) -> RunStats:
+           trace=None, failures=None, bucket: bool | None = None,
+           devices=None) -> RunStats:
     """Replay ``workload`` on ``topo`` under ``policy``; returns the
     engine's :class:`~repro.sim.metrics.RunStats` with the replay fields
     set: ``phase_cycles`` (per-phase durations), ``completion_cycles``
@@ -500,4 +501,5 @@ def replay(topo, policy, workload: Workload, *, backend: str = "numpy",
                     eject_bw=eject_bw, num_vcs=num_vcs,
                     queue_capacity=queue_capacity, warmup=0,
                     max_cycles=max_cycles, seed=seed, backend=backend,
-                    trace=trace, failures=failures)
+                    trace=trace, failures=failures, bucket=bucket,
+                    devices=devices)

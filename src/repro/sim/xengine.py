@@ -58,8 +58,9 @@ throughput, latency) within seed-matched tolerances.
 """
 from __future__ import annotations
 
+import hashlib
 import inspect
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, NamedTuple, Sequence
 
 import numpy as np
@@ -68,6 +69,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from .._compat import jaxapi
 from ..obs.telemetry import timed_compiled
 from ..obs.trace import Trace, TraceConfig, derive_backlog
 from .engine import _DRAIN_SLACK
@@ -79,6 +81,7 @@ from .topology import SimTopology
 from .traffic import Traffic, resolve_terminals
 
 _I32 = jnp.int32
+_I16 = jnp.int16
 _INT32_MAX = np.iinfo(np.int32).max
 #: Sentinel generation cycle for padded packet slots: larger than any
 #: simulated cycle, so a padded slot never becomes an injection candidate.
@@ -94,13 +97,35 @@ _MAX_HOPS = 127
 _LOG_ENTRY_BUDGET = 48_000_000
 
 
+def _bucket_count(x: int) -> int:
+    """The shape-bucketing boundary at or above ``x``.
+
+    Grid sizes, packet counts, and cycle horizons are rounded up to one
+    of these boundaries so that sweeps over many nearby sizes reuse a
+    handful of compiled programs instead of compiling one each (the
+    padding is fully masked — see :func:`sweep`).  The ladder bounds the
+    padding waste: exact powers of two below 8, multiples of 8 up to 64
+    (<= ~30% waste where programs are cheap anyway), then the
+    {2^k, 1.5 * 2^k} ladder (<= 33% waste) beyond."""
+    x = max(int(x), 1)
+    if x <= 8:
+        return 1 << (x - 1).bit_length()
+    if x <= 64:
+        return (x + 7) // 8 * 8
+    p = 1 << (x - 1).bit_length()          # next pow2 >= x
+    if 3 * p // 4 >= x:
+        return 3 * p // 4                  # the 1.5 * 2^(k-1) rung
+    return p
+
+
 class XSpec(NamedTuple):
     """Static (hashable) engine configuration — the jit cache key.
 
     ``horizon``/``cutoff`` are static so the loop can be a fixed-trip
     ``fori_loop`` and the ejection log can be allocated ``(horizon, Q)``;
-    sweeps with different cycle counts compile separately (sweeps share
-    one cycle count by construction, so this rarely recompiles).
+    :func:`sweep` buckets them (with the grid width and packet count) to
+    shared boundaries and measures to the *runtime* bounds riding in the
+    packet dict, so nearby sweep sizes reuse one compiled program.
     """
     n: int
     ports: int
@@ -298,14 +323,31 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
         # count); the window upper bound applies to open-loop drains.
         in_window = c >= warmup                      # (B,) per-copy mask
     else:
-        in_window = (c >= warmup) & (c < spec.horizon)
+        # The measurement horizon is the *runtime* ``h_eff``, not the
+        # (possibly bucket-padded) static ``spec.horizon``: a padded
+        # program measures exactly what the exact-shape program would.
+        in_window = (c >= warmup) & (c < pkt["h_eff"])
     # One random word per queue lane and per terminal lane; mechanisms
     # consume disjoint bit ranges of a word (threefry bits are
-    # independent), halving the per-cycle threefry work.
-    bits = jax.random.bits(jax.random.fold_in(base_key, c),
-                           (q_flat + nt_flat,))
-    lane_bits = bits[:q_flat]          # high 16: ejection; low 16: arb
-    term_bits = bits[q_flat:]          # high bits: arb; low: Valiant mid
+    # independent), halving the per-cycle threefry work.  The stream is
+    # drawn *per fabric copy* from a key folded over the copy's global
+    # id: copy b's bits depend only on (base key, cycle, copy_id[b]) —
+    # never on how many copies share the program — so bucket-padding
+    # the batch or sharding it across devices is bit-identical to the
+    # exact-shape single-device program.  Copy 0 keeps the unfolded
+    # per-cycle key: a single-copy program then draws the stream this
+    # engine has always drawn, preserving every seed-era single-run
+    # result bit for bit.
+    ck = jax.random.fold_in(base_key, c)
+    per_copy = n * pv + n * t
+    folded = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        ck, pkt["copy_id"])
+    keys = jnp.where((pkt["copy_id"] == 0)[:, None], ck, folded)
+    bits = jax.vmap(lambda k: jax.random.bits(k, (per_copy,)))(keys)
+    lane_bits = bits[:, :n * pv].reshape(q_flat)
+    #                                  ^ high 16: ejection; low 16: arb
+    term_bits = bits[:, n * pv:].reshape(nt_flat)
+    #                                  ^ high bits: arb; low: Valiant mid
 
     # -- queue heads --------------------------------------------------------
     lanes = jnp.arange(q_flat, dtype=_I32)
@@ -361,8 +403,8 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
         deliver = state.deliver.at[
             jnp.where(ej_win, pid, m_flat)].set(c, mode="drop")
         ej_log = state.ej_log
-    occ = state.occ - ej_win.astype(_I32)
-    head = state.head + ej_win.astype(_I32)
+    occ = state.occ - ej_win.astype(_I16)
+    head = state.head + ej_win.astype(_I16)
     delivered_total = state.delivered_total + ej_cnt
     delivered_win = state.delivered_win + jnp.where(in_window, ej_cnt, 0)
 
@@ -505,8 +547,8 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
     # is contender q itself (sentinel's index field cannot match).
     win_t = transit & ((minval_flat[tables.linkbase_of_lane + t_port]
                         & x_mask) == tables.x_of_lane)
-    occ = occ - win_t.astype(_I32)
-    head = head + win_t.astype(_I32)
+    occ = occ - win_t.astype(_I16)
+    head = head + win_t.astype(_I16)
 
     # Injection advance: terminal lane wins iff the winner of its link is
     # contender pv + (lane's slot within the switch).
@@ -535,7 +577,10 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
     buf = jnp.where(
         onehot[:, :, None],
         jnp.stack([pid_w, attr_w], axis=-1)[:, None, :], state.buf)
-    occ = occ + recv.astype(_I32)
+    occ = occ + recv.astype(_I16)
+    # Ring-buffer heads live in int16 (the dtype diet halves the hot
+    # state); stored mod capacity so they never overflow over long runs.
+    head = head % cap
 
     has_w = minval_flat != sent
     load_total = state.load_total + has_w.astype(_I32)
@@ -581,17 +626,27 @@ def _step(spec: XSpec, tables: _Tables, pkt: dict, base_key: jax.Array,
                   tr_occ=tr_occ, tr_inj=tr_inj, tr_del=tr_del)
 
 
-@partial(jax.jit, static_argnums=0)
-def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
+def _run_loop(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
               warmup: jax.Array) -> dict:
+    """One device's whole run: state init, the cycle loop, output dict.
+
+    Shapes derive from the *local* packet/block arrays, so the same body
+    serves the single-device jit (:data:`_run_flat`, all copies in one
+    flat state) and each shard of :func:`_sharded_runner` (a contiguous
+    block of copies per device).  The static ``spec.horizon``/``cutoff``
+    only size allocations and trip counts; the *measured* bounds are the
+    runtime ``pkt["h_eff"]``/``pkt["cutoff_eff"]`` scalars, so a
+    bucket-padded program computes exactly what the exact-shape program
+    would (see :func:`sweep`).
+    """
     n, p, v = spec.n, spec.ports, spec.vcs
     b = pkt["blk_start"].shape[0] // n
     bq = b * n * p * v
     m_flat = pkt["src"].shape[0]
     state = _State(
         buf=jnp.full((bq, spec.cap, 2), -1, _I32),
-        head=jnp.zeros(bq, _I32),
-        occ=jnp.zeros(bq, _I32),
+        head=jnp.zeros(bq, _I16),
+        occ=jnp.zeros(bq, _I16),
         deliver=jnp.full(m_flat if not spec.log_deliveries else 1, -1, _I32),
         ej_log=jnp.full((spec.horizon if spec.log_deliveries else 1, bq),
                         -1, _I32),
@@ -618,20 +673,29 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
     def body(st: _State):
         return _step(spec, tables, pkt, key, warmup, st)
 
+    # All copies of one program share a horizon by construction, so the
+    # per-copy runtime bounds collapse to scalars.
+    h_eff = pkt["h_eff"][0]
     if spec.drain:
         total_m = jnp.sum(pkt["m_real"])
+        cutoff_eff = pkt["cutoff_eff"][0]
 
         def cond(st: _State):
-            return (st.cycle < spec.horizon) | (
+            return (st.cycle < h_eff) | (
                 (jnp.sum(st.delivered_total) < total_m)
-                & (st.cycle < spec.cutoff))
+                & (st.cycle < cutoff_eff))
 
         final = lax.while_loop(cond, body, state)
     else:
         # Static trip count: unrolling folds several cycles into each XLA
-        # loop iteration, amortizing per-op dispatch overhead.
-        final = lax.fori_loop(0, spec.horizon, lambda _i, st: body(st),
-                              state, unroll=8)
+        # loop iteration, amortizing per-op dispatch overhead.  Bucket
+        # padding runs the loop to the padded horizon; the cond skips the
+        # padded tail cycles, leaving the state untouched past h_eff.
+        def step_or_skip(_i, st: _State):
+            return lax.cond(st.cycle < h_eff, body, lambda s: s, st)
+
+        final = lax.fori_loop(0, spec.horizon, step_or_skip, state,
+                              unroll=8)
     out = {
         "deliver": final.deliver,
         "ej_log": final.ej_log,
@@ -641,13 +705,68 @@ def _run_flat(spec: XSpec, tables: _Tables, pkt: dict, key: jax.Array,
         "delivered_in_window": final.delivered_win,
         "phase_done": final.phase_done,
         "cycle": final.cycle,
-        "in_flight": final.occ.reshape(b, n * p * v).sum(axis=1),
+        "in_flight": final.occ.reshape(b, n * p * v).sum(axis=1,
+                                                         dtype=_I32),
     }
     if spec.trace_stride:
         out.update(tr_cycle=final.tr_cycle, tr_link=final.tr_link,
                    tr_occ=final.tr_occ, tr_inj=final.tr_inj,
                    tr_del=final.tr_del)
     return out
+
+
+_run_flat = partial(jax.jit, static_argnums=0)(_run_loop)
+
+
+@lru_cache(maxsize=None)
+def _sharded_runner(spec: XSpec, ndev: int, pkt_keys: tuple):
+    """A jitted ``shard_map`` over a ``copies`` mesh axis: each of the
+    ``ndev`` devices runs :func:`_run_loop` on its contiguous block of
+    fabric copies.  Packet descriptors (``src``/``dst``/``gen``) are
+    *replicated* so packet ids stay global — per-shard block bounds,
+    delivery records, and ejection logs line up without any remapping —
+    while every per-copy array shards along its leading axis.  The copies
+    are disjoint fabrics, so the program is SPMD with zero collectives;
+    shard outputs gain a leading device axis and reassemble on the host
+    (see :func:`sweep`).  Donating the packet/warmup operands lets XLA
+    reuse their buffers for the (much larger) state."""
+    from jax.sharding import PartitionSpec
+
+    mesh = jaxapi.make_auto_mesh((ndev,), ("copies",))
+    rep, shard = PartitionSpec(), PartitionSpec("copies")
+    pkt_specs = {k: (rep if k in ("src", "dst", "gen") else shard)
+                 for k in pkt_keys}
+
+    def run(tables, pkt, key, warmup):
+        out = _run_loop(spec, tables, pkt, key, warmup)
+        return jax.tree_util.tree_map(lambda a: a[None], out)
+
+    return jax.jit(jaxapi.shard_map(
+        run, mesh=mesh, in_specs=(rep, pkt_specs, rep, shard),
+        out_specs=shard, check_vma=False), donate_argnums=(1, 3))
+
+
+def _resolve_devices(devices) -> int:
+    """Number of devices to shard the fabric copies across.
+
+    ``None``/``1`` = the classic single-program path; ``"auto"`` = every
+    visible JAX device; an int is validated against availability (on CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` exposes n
+    host devices)."""
+    if devices is None:
+        return 1
+    avail = jax.local_device_count()
+    if devices == "auto":
+        return max(avail, 1)
+    ndev = int(devices)
+    if ndev < 1:
+        raise ValueError(f"devices={devices!r} must be >= 1")
+    if ndev > avail:
+        raise ValueError(
+            f"devices={ndev} but only {avail} JAX device(s) are visible; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{ndev} before importing jax")
+    return ndev
 
 
 # ---------------------------------------------------------------------------
@@ -707,7 +826,8 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
           num_vcs: int | None = None, queue_capacity: int = 4,
           cycles: int | None = None, warmup: int | None = None,
           drain: bool | None = None, max_cycles: int | None = None,
-          trace=None) -> list[list[RunStats]]:
+          trace=None, bucket: bool | None = None,
+          devices=None) -> list[list[RunStats]]:
     """An entire saturation sweep as one compiled program.
 
     Every (offered load, seed) point becomes one replicated fabric copy
@@ -733,6 +853,23 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     :class:`~repro.obs.Trace` objects land on ``stats.trace``.  Packet
     spans (``TraceConfig.packets``) are a numpy-engine feature and are
     ignored here.
+
+    ``bucket`` (default on) rounds the program's *static* shapes — grid
+    width, packet count, horizon, drain cutoff — up to
+    :func:`_bucket_count` boundaries, so nearby sweep sizes share one
+    compiled program (and one persistent-cache entry) instead of
+    compiling each.  The padding is fully masked: padded copies carry no
+    packets, padded packet slots never become eligible, padded cycles
+    are skipped by the runtime ``h_eff`` bound, and the per-copy RNG
+    streams are keyed on global copy ids — so a bucketed run is
+    *bit-identical* to the exact-shape run (``tests/test_conformance.py``
+    pins this).  ``bucket=False`` restores exact shapes.
+
+    ``devices`` shards the fabric copies across JAX devices with
+    ``shard_map`` (``None`` = single device, ``"auto"`` = all visible,
+    or an int).  Copies are independent fabrics, so sharding is SPMD
+    with zero collectives and also bit-identical to the single-device
+    program.  Tracing forces the single-device path.
     """
     policy = _resolve_policy(policy)
     seeded_factory = _accepts_seed(traffic_factory)
@@ -799,14 +936,24 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
     warmups = [default_warmup if warmup is None else warmup] * len(grid)
     cutoff = int(max_cycles if max_cycles is not None
                  else horizon + _DRAIN_SLACK)
-    q_flat = len(grid) * n * topo.num_ports * num_vcs
-    log_deliveries = (not drain
-                      and horizon * q_flat <= _LOG_ENTRY_BUDGET)
+    bucket = True if bucket is None else bool(bucket)
     trace_cfg = TraceConfig.coerce(trace)
+    # Trace ring buffers slice per-copy columns host-side; the (rare,
+    # small) traced runs stay on the classic single-device path.
+    ndev = 1 if trace_cfg is not None else _resolve_devices(devices)
+    b_real = len(grid)
+    b_pad = _bucket_count(b_real) if bucket else b_real
+    b_pad = -(-b_pad // ndev) * ndev          # whole copy blocks per device
+    h_static = _bucket_count(horizon) if bucket else horizon
+    c_static = max(_bucket_count(cutoff) if bucket else cutoff, h_static)
+    q_flat = b_pad * n * topo.num_ports * num_vcs
+    log_deliveries = (not drain
+                      and h_static * q_flat <= _LOG_ENTRY_BUDGET)
     if trace_cfg is not None:
         # Static row budget: a drain run can stop anywhere below the
         # cutoff, so allocate for the worst case (capped by max_samples);
         # unwritten rows stay at the -1 sentinel and are dropped below.
+        # Budgets derive from the *exact* span — padded cycles never run.
         span = cutoff if drain else horizon
         trace_samples = min(trace_cfg.max_samples,
                             (max(span, 1) - 1) // trace_cfg.stride + 1)
@@ -817,35 +964,85 @@ def sweep(topo: SimTopology, policy, traffic_factory: Callable,
         policy=policy.name,
         threshold=float(getattr(policy, "threshold", 0.0)),
         weight=float(getattr(policy, "weight", 0.0)),
-        alpha=0.05, drain=bool(drain), horizon=horizon, cutoff=cutoff,
+        alpha=0.05, drain=bool(drain), horizon=h_static, cutoff=c_static,
         log_deliveries=log_deliveries, num_phases=num_phases,
         trace_stride=0 if trace_cfg is None else trace_cfg.stride,
         trace_samples=0 if trace_cfg is None else trace_samples)
 
     links = LinkTable.for_topology(topo, num_vcs)
-    tables = _build_tables(topo, links, len(grid), terminals, num_vcs)
+    tables = _build_tables(topo, links, b_pad // ndev, terminals, num_vcs)
 
     flat_np = {k: (np.concatenate([pk[k] for pk in packed])
                    if packed[0][k].ndim else
                    np.asarray([pk[k] for pk in packed]))
                for k in packed[0]}
-    if flat_np["src"].size == 0:
-        # Keep packet gathers in range for an all-empty grid: one inert
-        # slot whose generation time never becomes eligible.
-        flat_np["src"] = np.zeros(1, np.int32)
-        flat_np["dst"] = np.full(1, min(1, n - 1), np.int32)
-        flat_np["gen"] = np.full(1, _PAD_GEN, np.int32)
+    # Bucket the flat packet axis too, with inert padding slots: their
+    # generation time is past any horizon, so a padded slot never becomes
+    # an injection candidate (this also covers the all-empty grid, whose
+    # gathers need at least one in-range slot).  Padded *copies* carry
+    # empty source blocks, zero real packets, and warmup 0.
+    m_total = int(flat_np["src"].size)
+    m_pad = _bucket_count(max(m_total, 1)) if bucket else max(m_total, 1)
+    flat_np["src"] = np.concatenate(
+        [flat_np["src"], np.zeros(m_pad - m_total, np.int32)])
+    flat_np["dst"] = np.concatenate(
+        [flat_np["dst"], np.full(m_pad - m_total, min(1, n - 1), np.int32)])
+    flat_np["gen"] = np.concatenate(
+        [flat_np["gen"], np.full(m_pad - m_total, _PAD_GEN, np.int32)])
+    pad_b = b_pad - b_real
+    flat_np["blk_start"] = np.concatenate(
+        [flat_np["blk_start"], np.zeros(pad_b * n, np.int32)])
+    flat_np["blk_end"] = np.concatenate(
+        [flat_np["blk_end"], np.zeros(pad_b * n, np.int32)])
+    flat_np["m_real"] = np.concatenate(
+        [flat_np["m_real"], np.zeros(pad_b, np.int32)])
     if replaying:
         # Per-copy cumulative phase sizes, padded to the shared static
         # phase count (padding phases are empty and complete instantly).
-        flat_np["phase_cum"] = np.stack(
-            [w.phase_cum(num_phases) for w in wls]).astype(np.int32)
+        flat_np["phase_cum"] = np.concatenate(
+            [np.stack([w.phase_cum(num_phases) for w in wls]),
+             np.zeros((pad_b, num_phases))]).astype(np.int32)
+    # Global copy ids (the per-copy RNG fold keys) plus the runtime
+    # measurement bounds — per-copy so they shard with the batch.
+    flat_np["copy_id"] = np.arange(b_pad, dtype=np.int32)
+    flat_np["h_eff"] = np.full(b_pad, horizon, np.int32)
+    flat_np["cutoff_eff"] = np.full(b_pad, cutoff, np.int32)
+
+    # The persistent compile cache keys on content, not object identity:
+    # fold the (replicated) topology tables into the entry digest so two
+    # fabrics that merely share shapes never alias an entry.
+    dig = hashlib.sha256()
+    for a in tables:
+        dig.update(np.asarray(a).tobytes())
+    tab_digest = dig.hexdigest()
+
     flat = {k: jnp.asarray(a) for k, a in flat_np.items()}
     key = jax.random.PRNGKey(hash(tuple(s for _, s, _ in grid)) & 0x7FFFFFFF)
-    out, timing = timed_compiled(
-        _run_flat, spec, tables, flat, key, jnp.asarray(warmups, _I32),
-        grid_points=len(grid))
+    warm_j = jnp.asarray(np.asarray(warmups + [0] * pad_b, np.int32))
+    if ndev > 1:
+        runner = _sharded_runner(spec, ndev, tuple(sorted(flat)))
+        out, timing = timed_compiled(
+            runner, None, tables, flat, key, warm_j,
+            grid_points=b_real, key_extra=(spec, ndev, tab_digest))
+    else:
+        out, timing = timed_compiled(
+            _run_flat, spec, tables, flat, key, warm_j,
+            grid_points=b_real, key_extra=tab_digest)
     out = jax.tree_util.tree_map(np.asarray, out)
+    if ndev > 1:
+        # Host reassembly: shard outputs carry a leading device axis over
+        # contiguous copy blocks, so per-copy/per-link vectors flatten
+        # straight back into global copy-major order and ejection-log
+        # rows concatenate along the lane axis.  Delivery records hold
+        # *global* packet ids and are disjoint across shards (-1
+        # elsewhere), so an axis-0 max merges them.
+        out["deliver"] = out["deliver"].max(axis=0)
+        out["ej_log"] = np.concatenate(list(out["ej_log"]), axis=1)
+        for k in ("load_total", "load_window", "delivered_total",
+                  "delivered_in_window", "in_flight"):
+            out[k] = out[k].reshape(-1)
+        out["phase_done"] = out["phase_done"].reshape(b_pad, -1)
+        out["cycle"] = out["cycle"].max()
 
     total_m = max(1, int(sum(sizes)))
     if log_deliveries:
@@ -946,7 +1143,8 @@ def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
                  num_vcs: int | None = None, queue_capacity: int = 4,
                  cycles: int | None = None, warmup: int | None = None,
                  drain: bool | None = None, max_cycles: int | None = None,
-                 seed: int = 0, trace=None) -> RunStats:
+                 seed: int = 0, trace=None, bucket: bool | None = None,
+                 devices=None) -> RunStats:
     """One compiled run (a single-copy :func:`sweep`)."""
     if drain is None:
         drain = traffic.offered == 0
@@ -954,4 +1152,5 @@ def simulate_jax(topo: SimTopology, policy, traffic: Traffic, *,
                  seeds=(seed,), terminals=terminals, eject_bw=eject_bw,
                  num_vcs=num_vcs, queue_capacity=queue_capacity,
                  cycles=cycles, warmup=0 if warmup is None else warmup,
-                 drain=drain, max_cycles=max_cycles, trace=trace)[0][0]
+                 drain=drain, max_cycles=max_cycles, trace=trace,
+                 bucket=bucket, devices=devices)[0][0]

@@ -18,6 +18,9 @@ Commands:
   tracing and write a Perfetto/Chrome-loadable trace JSON
   (``ui.perfetto.dev``).  ``--backend both`` runs the numpy oracle *and*
   the compiled engine and fails unless their traces agree exactly.
+* ``cache``      — inspect the persistent compile cache (directory,
+  entries, hit/miss counters); ``--clear`` evicts the disk entries.
+  See ``docs/compile_cache.md``.
 * ``specs``      — list the bundled spec files.
 
 Examples::
@@ -27,6 +30,8 @@ Examples::
     python -m repro.studies run cin16_saturation --store knees.jsonl
     python -m repro.studies show my_experiment.json
     python -m repro.studies show collective_replay --trace
+    python -m repro.studies cache
+    python -m repro.studies cache --clear
     python -m repro.studies trace export collective_replay \\
         --experiment cin-xor-16/replay-all_to_all/minimal \\
         --backend both --packets 8 --out trace-cin16.json
@@ -180,7 +185,8 @@ def _show_trace(spec_path: str, specs, store_arg: str | None) -> None:
         timed += 1
         amortized = (timings.get("total_s", 0.0)
                      / max(timings.get("grid_points", 1), 1))
-        cached = " (cached)" if timings.get("compile_cached") else ""
+        kind = timings.get("compile_cached")
+        cached = f" (cached: {kind})" if kind else ""
         print(f"  {key}")
         print(f"    backend={timings.get('backend')} host={prov.get('host')}"
               f" jax={prov.get('jax')}")
@@ -277,6 +283,36 @@ def cmd_trace(args) -> int:
     return 0
 
 
+def cmd_cache(args) -> int:
+    """Inspect (or clear) the persistent compile cache.
+
+    The disk layer makes the compiled engine pay its compile once per
+    machine instead of once per process; this command is the operator's
+    view of it — where it lives, what it holds, and how this process's
+    acquisitions split across memory/disk/recompile.
+    """
+    from repro.obs.telemetry import (cache_dir, cache_stats, clear_caches,
+                                     disk_cache_entries)
+    cdir = cache_dir()
+    if cdir is None:
+        print("compile cache: disabled (LACIN_CACHE_DIR is set but empty)")
+        return 0
+    entries = disk_cache_entries()
+    if args.clear:
+        clear_caches(memory=True, disk=True)
+        print(f"cleared {len(entries)} entries from {cdir}")
+        return 0
+    total = sum(p.stat().st_size for p in entries)
+    print(f"dir:     {cdir}")
+    print(f"entries: {len(entries)} ({total / 1e6:.1f} MB)")
+    for p in entries:
+        print(f"  {p.name}  {p.stat().st_size / 1e6:.2f} MB")
+    stats = cache_stats()
+    print("this-process counters: " +
+          " ".join(f"{k}={v}" for k, v in sorted(stats.items())))
+    return 0
+
+
 def cmd_specs(_args) -> int:
     for name, path in bundled_specs().items():
         n_exp = len(load_specs(path))
@@ -335,6 +371,13 @@ def main(argv=None) -> int:
     trace.add_argument("--out", default=None,
                        help="output path (default: trace-<experiment>.json)")
     trace.set_defaults(fn=cmd_trace)
+
+    cache = sub.add_parser(
+        "cache", help="inspect the persistent compile cache")
+    cache.add_argument("--clear", action="store_true",
+                       help="evict every disk entry (and the in-process "
+                            "LRU) instead of listing them")
+    cache.set_defaults(fn=cmd_cache)
 
     specs = sub.add_parser("specs", help="list bundled spec files")
     specs.set_defaults(fn=cmd_specs)

@@ -340,15 +340,28 @@ def test_numpy_runs_carry_wall_clock_timing():
 
 
 def test_jax_runs_split_compile_from_execute():
-    from repro.obs.telemetry import _CACHE
-    _CACHE.clear()
-    cold = _replay("jax")
-    warm = _replay("jax")
+    from repro.obs.telemetry import clear_caches
+    clear_caches(memory=True, disk=True)
+    # message_size=4 gives this test a program no other test in the
+    # session compiles, so the cold run is genuinely cold (jax keeps its
+    # own in-process HLO-level compile cache that clear_caches cannot
+    # reach — a shape-identical program compiled elsewhere would make
+    # "cold" compile in milliseconds and invert the timing assertions).
+    _cache_replay = lambda: _cin16().replay(  # noqa: E731
+        "all_to_all", message_size=4, backend="jax")
+    cold = _cache_replay()
+    warm = _cache_replay()
     assert cold.timing["backend"] == "jax"
     assert not cold.timing["compile_cached"]
     assert cold.timing["compile_s"] > 0 and cold.timing["execute_s"] > 0
-    assert warm.timing["compile_cached"]
+    assert warm.timing["compile_cached"] == "memory"
     assert warm.timing["compile_s"] == 0.0
+    # dropping the memory layer falls back to the persistent disk layer:
+    # same program, deserialized in milliseconds instead of recompiled
+    clear_caches(memory=True, disk=False)
+    disk = _cache_replay()
+    assert disk.timing["compile_cached"] == "disk"
+    assert disk.timing["compile_s"] < cold.timing["compile_s"]
 
 
 def test_timed_compiled_caches_per_signature():
